@@ -1,0 +1,32 @@
+"""Fig. 1: total decoding throughput of N concurrent Llama3-8B instances,
+UM vs MSched on a 16 GB GPU. Paper: UM collapses 78x; MSched sustains most
+of the in-HBM rate."""
+from benchmarks.common import bench_combo, timed
+
+
+def run():
+    rows = []
+    for n_inst, scale in ((2, 1.0), (3, 1.5), (4, 2.0)):
+        r, us = timed(bench_combo, "D", scale, ("um", "msched"))
+        um = r["um"].throughput_per_s() / max(r["base"], 1e-9)
+        ms = r["msched"].throughput_per_s() / max(r["base"], 1e-9)
+        slowdown = 1.0 / max(um, 1e-9)
+        rows.append(
+            (
+                f"fig01_n{len_name(r)}",
+                us,
+                f"um={um:.4f};msched={ms:.4f};um_slowdown={slowdown:.0f}x;"
+                f"speedup={ms / max(um, 1e-9):.1f}x",
+            )
+        )
+    return rows
+
+
+def len_name(r):
+    return f"{r['oversub']:.2f}oversub"
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

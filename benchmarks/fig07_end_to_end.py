@@ -1,0 +1,28 @@
+"""Fig. 7: end-to-end throughput for combos A-D under Light/Medium/Heavy
+pressure. Paper speedups msched/um: A-C avg 11.05/9.35/7.52x,
+D: 57.88/44.79/33.60x."""
+from benchmarks.common import bench_combo, timed
+
+
+def run():
+    rows = []
+    for name in ("A", "B", "C", "D"):
+        for scale, label in ((1.5, "light"), (2.0, "medium"), (3.0, "heavy")):
+            r, us = timed(bench_combo, name, scale, ("um", "msched"))
+            um = r["um"].throughput_per_s() / max(r["base"], 1e-9)
+            ms = r["msched"].throughput_per_s() / max(r["base"], 1e-9)
+            rows.append(
+                (
+                    f"fig07_{name}_{label}",
+                    us,
+                    f"oversub={r['oversub']:.2f};um={um:.4f};msched={ms:.4f};"
+                    f"speedup={ms / max(um, 1e-9):.1f}x",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,62 @@
+"""Fig. 9 (+§3 bandwidth table): migration bandwidth by method, and the
+end-to-end effect of pipelined migration. Paper: faulted 0.12 GB/s vs
+batched 41.7 GB/s (347x); pipelined swap 63.5 GB/s on RTX 5080 (1.52x) /
+39.8 GB/s on RTX 3080 (1.79x); end-to-end 1.27-1.51x."""
+from repro.core.hardware import RTX3080, RTX5080, fault_bandwidth_gbps
+from repro.core.migration import effective_swap_bandwidth_gbps
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import combo
+
+from benchmarks.common import MSCHED_Q, PAGE, timed
+
+
+def run():
+    rows = []
+    for plat in (RTX5080, RTX3080):
+        def bw():
+            faulted = fault_bandwidth_gbps(plat)
+            plain = effective_swap_bandwidth_gbps(plat, 1 << 30, pipelined=False)
+            piped = effective_swap_bandwidth_gbps(plat, 1 << 30, pipelined=True)
+            return faulted, plain, piped
+
+        (faulted, plain, piped), us = timed(bw)
+        rows.append(
+            (
+                f"fig09a_{plat.name}",
+                us,
+                f"faulted_GBps={faulted:.3f};swap_GBps={plain:.1f};"
+                f"pipelined_GBps={piped:.1f};pipeline_speedup={piped / plain:.2f}x;"
+                f"batched_vs_fault={plat.h2d_gbps / faulted:.0f}x",
+            )
+        )
+
+    # fig 9b: end-to-end with and without pipelining
+    for scale, label in ((1.5, "150"), (2.0, "200"), (3.0, "300")):
+        progs = lambda: combo("D", page_size=PAGE["D"], scale=scale)
+        foot = sum(p.footprint_bytes() for p in progs())
+
+        def one(pipelined):
+            return simulate(
+                progs(), RTX5080, "msched",
+                capacity_bytes=RTX5080.hbm_bytes,
+                sim_us=3_000_000, policy=RoundRobinPolicy(MSCHED_Q),
+                pipelined=pipelined,
+            ).throughput_per_s()
+
+        w, us1 = timed(one, True)
+        wo, us2 = timed(one, False)
+        rows.append(
+            (
+                f"fig09b_sub{label}",
+                us1 + us2,
+                f"with_pipeline={w:.1f};without={wo:.1f};speedup={w / max(wo, 1e-9):.2f}x",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

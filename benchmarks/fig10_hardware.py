@@ -1,0 +1,41 @@
+"""Fig. 10: RTX 5080 (16 GB, PCIe5) vs RTX 3080 (10 GB, PCIe4) under equal
+oversubscribed volume and equal ratio. Paper: at equal volume the 5080 wins
+(bandwidth), at equal ratio they converge (smaller absolute volume masks the
+3080's bandwidth deficit)."""
+from repro.core.hardware import RTX3080, RTX5080
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import combo
+
+from benchmarks.common import MSCHED_Q, PAGE, timed
+
+
+def _thr(plat, cap_bytes, scale=1.0):
+    progs = combo("D", page_size=PAGE["D"], scale=scale)
+    r = simulate(
+        progs, plat, "msched", capacity_bytes=cap_bytes,
+        sim_us=3_000_000, policy=RoundRobinPolicy(MSCHED_Q),
+    )
+    return r.throughput_per_s()
+
+
+def run():
+    rows = []
+    # equal oversubscribed VOLUME: footprint - capacity = const (6 GiB)
+    vol = 6 << 30
+    progs = combo("D", page_size=PAGE["D"], scale=1.0)
+    foot = sum(p.footprint_bytes() for p in progs)
+    for plat in (RTX5080, RTX3080):
+        t, us = timed(_thr, plat, max(foot - vol, 1 << 30))
+        rows.append((f"fig10a_equal_volume_{plat.name}", us, f"thr={t:.1f}"))
+    # equal oversubscription RATIO (150%)
+    for plat in (RTX5080, RTX3080):
+        t, us = timed(_thr, plat, int(foot / 1.5))
+        rows.append((f"fig10b_equal_ratio_{plat.name}", us, f"thr={t:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,53 @@
+"""Fig. 12: MSched vs SUV (single-task static-prefetch) vs UM on the RTX 3080
+testbed (microbenchmark workloads — SUV can't run closed-source kernels).
+Paper: SUV <= UM in multitasking; MSched 7.18x over SUV at 300%."""
+from repro.core.hardware import RTX3080
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import MatMulTask, VecAddTask
+
+from benchmarks.common import MSCHED_Q, UM_Q, timed
+
+PAGE = 256 << 10
+
+
+def _tasks():
+    return [
+        VecAddTask(0, n_bytes=384 << 20, kernels_per_iter=4, page_size=PAGE),
+        VecAddTask(1, n_bytes=384 << 20, kernels_per_iter=4, page_size=PAGE),
+        MatMulTask(2, dim=8192, n_matrices=8, page_size=PAGE),
+        MatMulTask(3, dim=8192, n_matrices=8, page_size=PAGE),
+    ]
+
+
+def run():
+    rows = []
+    foot = sum(p.footprint_bytes() for p in _tasks())
+    for ratio in (1.5, 2.0, 3.0):
+        cap = int(foot / ratio)
+        res = {}
+        total_us = 0.0
+        for b in ("um", "suv", "msched"):
+            q = MSCHED_Q if b == "msched" else UM_Q
+            r, us = timed(
+                simulate, _tasks(), RTX3080, b, capacity_bytes=cap,
+                sim_us=3_000_000, policy=RoundRobinPolicy(q),
+            )
+            res[b] = r.throughput_per_s()
+            total_us += us
+        rows.append(
+            (
+                f"fig12_sub{int(ratio * 100)}",
+                total_us,
+                f"um={res['um']:.1f};suv={res['suv']:.1f};msched={res['msched']:.1f};"
+                f"msched_vs_suv={res['msched'] / max(res['suv'], 1e-9):.1f}x;"
+                f"suv_vs_um={res['suv'] / max(res['um'], 1e-9):.2f}x",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,85 @@
+"""Pallas kernel microbenches (interpret mode on CPU — wall times are NOT
+TPU times; 'derived' reports the analytic TPU v5e roofline estimate for the
+same shapes: max(flops/197TF, bytes/819GBps))."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import TPU_V5E_HBM_GBPS, TPU_V5E_PEAK_BF16_FLOPS
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.streammm.kernel import stream_matmul, stream_matmul_int8
+
+from benchmarks.common import timed
+
+
+def _roofline_us(flops, bytes_):
+    return max(flops / TPU_V5E_PEAK_BF16_FLOPS, bytes_ / (TPU_V5E_HBM_GBPS * 1e9)) * 1e6
+
+
+def run():
+    rows = []
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+
+    m, k, n = 256, 512, 256
+    x = jax.random.normal(k1, (m, k), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(k2, (k, n), jnp.float32).astype(jnp.bfloat16)
+    _, us = timed(
+        lambda: jax.block_until_ready(
+            stream_matmul(x, w, block_m=128, block_n=128, block_k=128, interpret=True)
+        )
+    )
+    fl, by = 2 * m * k * n, 2 * (m * k + k * n + m * n)
+    rows.append(
+        ("kernel_streammm", us, f"tpu_roofline_us={_roofline_us(fl, by):.2f};interpret=True")
+    )
+
+    wq = jax.random.randint(k2, (k, n), -127, 127, jnp.int8)
+    scales = jnp.ones((k // 128, n), jnp.float32) * 0.01
+    _, us = timed(
+        lambda: jax.block_until_ready(
+            stream_matmul_int8(x, wq, scales, block_m=128, block_n=128, block_k=128, interpret=True)
+        )
+    )
+    by8 = 2 * m * k + k * n + 2 * m * n
+    rows.append(
+        ("kernel_streammm_int8", us, f"tpu_roofline_us={_roofline_us(fl, by8):.2f};interpret=True")
+    )
+
+    b, s, h, hkv, d = 1, 512, 8, 2, 64
+    q = jax.random.normal(k1, (b, s, h, d), jnp.float32).astype(jnp.bfloat16)
+    kk = jax.random.normal(k2, (b, s, hkv, d), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(k1, (b, s, hkv, d), jnp.float32).astype(jnp.bfloat16)
+    _, us = timed(
+        lambda: jax.block_until_ready(
+            flash_attention(q, kk, v, block_q=128, block_kv=128, interpret=True)
+        )
+    )
+    fl = 2 * 2 * b * h * s * s * d * 0.5  # causal
+    by = 2 * (q.size + kk.size + v.size + q.size)
+    rows.append(
+        ("kernel_flash_attention", us, f"tpu_roofline_us={_roofline_us(fl, by):.2f};interpret=True")
+    )
+
+    bb, hh, dd, pt, mp = 4, 8, 64, 32, 8
+    pool_k = jax.random.normal(k1, (bb * mp, pt, 2, dd), jnp.float32).astype(jnp.bfloat16)
+    pool_v = pool_k
+    qq = jax.random.normal(k2, (bb, hh, dd), jnp.float32).astype(jnp.bfloat16)
+    table = jnp.arange(bb * mp, dtype=jnp.int32).reshape(bb, mp)
+    lens = jnp.full((bb,), pt * mp - 3, jnp.int32)
+    _, us = timed(
+        lambda: jax.block_until_ready(
+            paged_attention(qq, pool_k, pool_v, table, lens, interpret=True)
+        )
+    )
+    by = 2 * (pool_k.size + pool_v.size)
+    fl = 2 * 2 * bb * hh * pt * mp * dd
+    rows.append(
+        ("kernel_paged_attention", us, f"tpu_roofline_us={_roofline_us(fl, by):.2f};interpret=True")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

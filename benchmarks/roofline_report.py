@@ -1,0 +1,152 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.jsonl).
+
+Per (arch x shape x mesh): the three roofline terms in seconds —
+  compute    = dot_FLOPs_per_device / 197 TF/s   (bf16 MXU peak, v5e)
+  memory     = bytes_per_device / 819 GB/s       (HBM BW)
+  collective = collective_bytes_per_device / 50 GB/s (ICI link)
+dominant term, MODEL_FLOPS = 6·N(active)·D tokens, and the useful-compute
+ratio MODEL_FLOPS / compiled_FLOPs.
+
+The memory-bytes term uses cost_analysis 'bytes accessed' corrected by the
+scan trip count ratio (dot_flops / flops_raw), since XLA's analysis counts
+while bodies once (see roofline/hlo_costs.py).
+"""
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.hardware import (
+    TPU_V5E_HBM_GBPS,
+    TPU_V5E_ICI_GBPS,
+    TPU_V5E_PEAK_BF16_FLOPS,
+)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analytic_bytes_floor(arch: str, shape_name: str, n_dev: int) -> float:
+    """Minimum per-device HBM traffic: parameters (+optimizer state for
+    train), KV/state cache, and the remat carry stack — each touched at
+    least once per step. cost_analysis counts loop-carried tensors once,
+    which is roughly right for these (weights/cache read once per step),
+    so the roofline memory term is max(raw_bytes, this floor)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    p_bytes = cfg.param_count() * 2  # bf16
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write + param rw + f32 opt state rw
+        opt_mult = 12 if cfg.optimizer == "adamw" else 6
+        d = cfg.d_model
+        local_batch = max(shape.global_batch // 16, 1)  # data axis
+        carry = cfg.num_layers * local_batch * shape.seq_len * d * 2
+        return (opt_mult * p_bytes) / n_dev + 3 * carry / 16  # model axis
+    # serving: params + cache traffic
+    hd = cfg.resolved_head_dim() if cfg.num_heads else 0
+    if cfg.family == "ssm":
+        cache = (
+            cfg.num_layers
+            * shape.global_batch
+            * (cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim)
+            * cfg.ssm.head_dim
+            * cfg.ssm.state_dim
+            * 4
+        )
+    elif cfg.rglru is not None:
+        kinds = cfg.layer_kinds()
+        n_attn = sum(1 for k in kinds if k == "attn")
+        n_rec = sum(1 for k in kinds if k == "rec")
+        cache = (
+            n_attn * shape.global_batch * min(cfg.rglru.window, shape.seq_len)
+            * cfg.num_kv_heads * hd * 2 * 2
+            + n_rec * shape.global_batch * cfg.d_model * 4
+        )
+    else:
+        cache = (
+            cfg.num_layers * shape.global_batch * shape.seq_len
+            * cfg.num_kv_heads * hd * 2 * 2
+        )
+    mult = 2 if shape.kind == "prefill" else 1  # prefill writes + attends
+    return (p_bytes + mult * cache) / n_dev
+
+
+def roofline_terms(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    hc = rec["hlo_costs"]
+    ca = rec["cost_analysis"]
+    dot = hc["dot_flops"]  # per-device, trip-count-corrected
+    bytes_dev = max(
+        ca["bytes_raw"],
+        analytic_bytes_floor(rec["arch"], rec["shape"], n_dev),
+    )
+    coll = sum(hc["collective_bytes"].values())
+    t_compute = dot / TPU_V5E_PEAK_BF16_FLOPS
+    t_memory = bytes_dev / (TPU_V5E_HBM_GBPS * 1e9)
+    t_coll = coll / (TPU_V5E_ICI_GBPS * 1e9)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(dot * n_dev, 1.0)
+    bound = max(terms.values())
+    ideal = mf / (n_dev * TPU_V5E_PEAK_BF16_FLOPS)
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": (ideal / bound) if bound > 0 else 0.0,
+    }
+
+
+def load_rows(path: str = RESULTS):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def run():
+    out = []
+    for rec in load_rows():
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec["status"] == "skipped":
+            out.append((name, 0.0, f"skipped:{rec['skip_reason']}"))
+            continue
+        if rec["status"] != "ok":
+            out.append((name, 0.0, f"error:{rec.get('error', '?')[:80]}"))
+            continue
+        t = roofline_terms(rec)
+        out.append(
+            (
+                name,
+                t["t_" + t["dominant"] + "_s"] * 1e6,
+                f"compute_s={t['t_compute_s']:.4f};memory_s={t['t_memory_s']:.4f};"
+                f"collective_s={t['t_collective_s']:.4f};dominant={t['dominant']};"
+                f"useful_ratio={t['useful_ratio']:.3f};"
+                f"roofline_fraction={t['roofline_fraction']:.3f}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run`` runs
+everything; ``--only fig07`` filters by prefix.
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "fig01_llm_multitask",
+    "fig02_access_pattern",
+    "table1_prediction_accuracy",
+    "table2_template_mix",
+    "fig06_microbench",
+    "fig07_end_to_end",
+    "fig08_prediction_ablation",
+    "fig09_pipeline",
+    "fig10_hardware",
+    "fig11_overhead",
+    "fig12_suv",
+    "fig13_rt_be",
+    "kernels_bench",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="module name prefix filter")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and not mod_name.startswith(args.only):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{mod_name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Table 2: share of fixed/linear/strided/other access regions per workload.
+Paper: fixed ~60-99%, linear up to ~38% (llama), strided up to ~10%,
+other <1%."""
+from repro.core.profiler import profile_programs
+from repro.core.templates import analyze_traces, template_mix_table
+from repro.core.workloads import combo
+
+from benchmarks.common import PAGE, timed
+
+
+def run():
+    rows = []
+    for name, label in (("A", "rodinia"), ("B", "pytorch_infer"), ("D", "llama")):
+        def mix():
+            progs = combo(name, page_size=PAGE[name])
+            store = profile_programs(progs, iters=4)
+            return template_mix_table(analyze_traces(store), store)
+
+        m, us = timed(mix)
+        rows.append(
+            (
+                f"table2_{label}",
+                us,
+                f"fixed={m['fixed']:.1f};linear={m['linear']:.1f};"
+                f"strided={m['strided']:.1f};other={m['opaque']:.2f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,39 @@
+"""The paper's headline scenario, live: three model instances time-share a
+device whose memory budget holds only half their aggregate weights (200%
+oversubscription). MSched predicts each task's working set from its command
+stream (template predictor), enforces timeline-aligned OPT placement, and
+migrates real arrays host<->device on every extended context switch.
+
+    PYTHONPATH=src python examples/multitask_oversubscription.py
+"""
+import time
+
+import jax
+
+from repro.core.runtime import LiveModelTask, LiveRuntime
+
+
+def main():
+    archs = ["qwen3-1.7b", "llama3.2-3b", "mamba2-1.3b"]
+    tasks = [LiveModelTask(i, a, seed=i) for i, a in enumerate(archs)]
+    total = sum(t.footprint_bytes() for t in tasks)
+    budget = int(total / 2.0)
+    print(f"aggregate working set {total/2**20:.1f} MiB, device budget "
+          f"{budget/2**20:.1f} MiB (200% oversubscription)")
+
+    rt = LiveRuntime(tasks, budget, steps_per_slice=4)
+    t0 = time.time()
+    stats = rt.run(total_slices=9)  # 3 slices each, round robin
+    dt = time.time() - t0
+
+    print(f"steps per task: {stats.steps}")
+    print(f"proactively migrated in : {stats.migrated_in_bytes/2**20:8.1f} MiB")
+    print(f"evicted to host         : {stats.migrated_out_bytes/2**20:8.1f} MiB")
+    print(f"demand faults (F- path) : {stats.demand_faults}")
+    print(f"avg switch coordinator  : {1e3*sum(stats.switch_wall_s)/len(stats.switch_wall_s):.2f} ms"
+          f"  (paper Fig. 11: <1 ms control plane @ GPU scale)")
+    print(f"wall time: {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Quickstart: train a tiny LM for 30 steps on synthetic data (CPU, ~1 min).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.data.pipeline import pipeline_for
+from repro.launch.steps import make_train_state, make_train_step
+
+
+def main():
+    cfg = get_config("qwen3-1.7b").reduced()
+    shape = ShapeSpec("quickstart", seq_len=128, global_batch=8, kind="train")
+    pipe = pipeline_for(cfg, shape)
+
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(
+        make_train_step(cfg, peak_lr=1e-3, warmup=5, total_steps=30),
+        donate_argnums=(0,),
+    )
+
+    print(f"arch={cfg.name} (reduced) params="
+          f"{sum(p.size for p in jax.tree.leaves(state['params'])):,}")
+    for i in range(30):
+        batch = {k: jax.numpy.asarray(v) for k, v in pipe.batch(i).items()}
+        state, m = step(state, batch)
+        if i % 5 == 0 or i == 29:
+            print(f"step {i:3d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  gnorm {float(m['grad_norm']):.2f}")
+    print("done — loss should have dropped from ~ln(512)=6.24")
+
+
+if __name__ == "__main__":
+    main()

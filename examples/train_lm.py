@@ -1,0 +1,65 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred steps
+with the full substrate — sharded state, deterministic data pipeline, WSD
+schedule, async checkpointing, fault-tolerant supervisor, and (optional)
+restart continuation.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--kill-at 120]
+
+``--kill-at`` injects a node failure mid-run to demonstrate restart-from-
+checkpoint: the run resumes from the last checkpoint and finishes, and the
+loss curve is identical to an uninterrupted run.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.runtime.train_loop import FailureInjector, TrainSupervisor
+
+
+def build_cfg():
+    # ~100M-param llama-style config (scaled-down llama3.2 family)
+    base = get_config("llama3.2-3b")
+    return dataclasses.replace(
+        base,
+        num_layers=8,
+        d_model=640,
+        num_heads=10,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=1792,
+        vocab_size=32000,
+        remat=False,
+        schedule="wsd",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--kill-at", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_cfg()
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+    shape = ShapeSpec("train", seq_len=128, global_batch=4, kind="train")
+    sup = TrainSupervisor(cfg, shape, args.ckpt_dir, ckpt_every=40)
+    injector = FailureInjector([args.kill_at]) if args.kill_at else None
+
+    t0 = time.time()
+    report = sup.run(args.steps, injector=injector)
+    dt = time.time() - t0
+    print(
+        f"steps={report.steps_run} restarts={report.restarts} "
+        f"checkpoints={report.checkpoints} stragglers={report.straggler_steps}"
+    )
+    print(f"loss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f}  ({dt:.0f}s)")
+    assert report.losses[-1] < report.losses[0]
+
+
+if __name__ == "__main__":
+    main()

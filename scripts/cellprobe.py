@@ -1,0 +1,46 @@
+"""Hillclimb probe: recompile one dry-run cell and print its roofline terms.
+
+Usage: PYTHONPATH=src python scripts/cellprobe.py <arch> <shape> [micro]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.launch import dryrun  # noqa: E402
+from benchmarks.roofline_report import roofline_terms  # noqa: E402
+
+arch, shape = sys.argv[1], sys.argv[2]
+if len(sys.argv) > 3:
+    os.environ["REPRO_MICROBATCH"] = sys.argv[3]
+rec = dryrun.run_cell(arch, shape, multi_pod=False)
+if rec["status"] != "ok":
+    print(rec.get("error"))
+    print(rec.get("traceback", "")[-1500:])
+    sys.exit(1)
+t = roofline_terms(rec)
+out = {
+    "arch": arch,
+    "shape": shape,
+    "compile_s": rec["compile_s"],
+    "temp_GiB": round(rec["mem"]["temp_bytes"] / 2**30, 2),
+    "dot_TF_dev": round(rec["hlo_costs"]["dot_flops"] / 1e12, 2),
+    "coll_GB_dev": round(sum(rec["hlo_costs"]["collective_bytes"].values()) / 1e9, 2),
+    "coll_by_kind_GB": {
+        k: round(v / 1e9, 1)
+        for k, v in rec["hlo_costs"]["collective_bytes"].items()
+        if v
+    },
+    "terms_s": {
+        "compute": round(t["t_compute_s"], 4),
+        "memory": round(t["t_memory_s"], 4),
+        "collective": round(t["t_collective_s"], 4),
+    },
+    "dominant": t["dominant"],
+    "useful_ratio": round(t["useful_ratio"], 3),
+    "roofline_fraction": round(t["roofline_fraction"], 4),
+}
+print(json.dumps(out, indent=1))

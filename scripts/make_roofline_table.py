@@ -1,0 +1,38 @@
+"""Render results/dryrun.jsonl into the §Roofline markdown table.
+
+    PYTHONPATH=src:. python scripts/make_roofline_table.py > results/roofline.md
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.roofline_report import load_rows, roofline_terms  # noqa: E402
+
+
+def main():
+    rows = load_rows()
+    print("# Roofline table (TPU v5e constants; per-device terms)\n")
+    print("| arch | shape | mesh | compute s | memory s | collective s | dominant | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skipped":
+            print(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped: {r['skip_reason']} | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | |")
+            continue
+        t = roofline_terms(r)
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['t_compute_s']:.4f} | {t['t_memory_s']:.4f} "
+            f"| {t['t_collective_s']:.4f} | {t['dominant']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.4f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Sharded checkpointing: per-leaf .npy files + msgpack manifest.
+
+Mesh-shape-agnostic: leaves are saved as full (addressable-assembled) arrays
+and restored with ``jax.device_put`` against the *target* sharding, so a
+checkpoint written on one mesh restores onto any other (elastic re-mesh).
+Async save runs serialization on a background thread (compute/IO overlap);
+``save`` is atomic via tmp-dir rename. Retention keeps the newest K steps.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+MANIFEST = "manifest.msgpack"
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return leaves, paths, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Synchronous atomic save; returns the final directory."""
+    leaves, paths, _ = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    meta = {"step": step, "leaves": []}
+    for i, (leaf, path) in enumerate(zip(leaves, paths)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        dtype_name = str(arr.dtype)
+        # np.save round-trips ml_dtypes (bfloat16, float8…) as raw void —
+        # store a uint view and reconstruct from the manifest dtype
+        if arr.dtype.kind == "V" or dtype_name not in np.sctypeDict:
+            view = {1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize]
+            np.save(os.path.join(tmp, fname), arr.view(view))
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+        meta["leaves"].append(
+            {"path": path, "file": fname, "dtype": dtype_name, "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp, MANIFEST), "wb") as f:
+        f.write(msgpack.packb(meta))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target: Any) -> Any:
+    """Restore into the structure/shardings of ``target`` (abstract or
+    concrete pytree with .sharding on leaves)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, MANIFEST), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    leaves, paths, treedef = _flatten(target)
+    by_path = {e["path"]: e for e in meta["leaves"]}
+    out = []
+    for leaf, path in zip(leaves, paths):
+        entry = by_path[path]
+        arr = np.load(os.path.join(d, entry["file"]))
+        want = jax.numpy.dtype(entry["dtype"])
+        if arr.dtype != want:
+            arr = arr.view(want) if arr.dtype.itemsize == want.itemsize else arr.astype(want)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and not isinstance(
+            sharding, jax.sharding.SingleDeviceSharding
+        ):
+            out.append(jax.device_put(arr, sharding))
+        else:
+            # np.load preserves ml_dtypes (bfloat16 etc.); no cast needed
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint serialization with training compute."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        # device_get on the main thread (orderly with respect to donation),
+        # file IO on the worker
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, keep=self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,17 @@
+"""grok-1-314b [moe] — 8 experts top-2. [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    head_dim=128,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff=32768),
+    optimizer="adafactor",  # AdamW state (12 B/param) would exceed 16 GB/chip
+    notes="MoE 8e top-2; GQA kv=8",
+)

@@ -1,0 +1,19 @@
+"""MSched core: proactive memory scheduling for accelerator multitasking.
+
+The paper's contribution as a composable library — see DESIGN.md.
+"""
+from repro.core.hardware import PLATFORMS, RTX3080, RTX5080, TPU_V5E  # noqa: F401
+from repro.core.hbm import HBMPool  # noqa: F401
+from repro.core.memory_manager import Coordinator, TaskHelper  # noqa: F401
+from repro.core.opt import belady_reference, build_plan  # noqa: F401
+from repro.core.predictor import (  # noqa: F401
+    AllocationPredictor,
+    OraclePredictor,
+    TemplatePredictor,
+    evaluate_accuracy,
+)
+from repro.core.profiler import profile_programs  # noqa: F401
+from repro.core.scheduler import PriorityPolicy, RoundRobinPolicy  # noqa: F401
+from repro.core.simulator import simulate  # noqa: F401
+from repro.core.templates import analyze_traces, template_mix_table  # noqa: F401
+from repro.core.timeline import TaskTimeline, TimelineEntry  # noqa: F401

@@ -1,0 +1,97 @@
+"""HBM residency pool with an explicit eviction list.
+
+This is the library form of the paper's modified kernel-mode driver state:
+an LRU-ordered eviction list over resident pages, with two new operations —
+
+  madvise(pages)  — move pages to the list *tail*, protecting them (the new
+                    ioctl MSched adds to the KMD, §6.2);
+  migrate(pages)  — evict from the list *head* until there is room, then
+                    populate the given pages (the new migrate engine).
+
+Under demand paging, faults evict from the head (standard driver behavior).
+Page keys are global integers (task address spaces are disjoint).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Iterable, List, Set, Tuple
+
+
+class HBMPool:
+    def __init__(self, capacity_pages: int):
+        assert capacity_pages > 0
+        self.capacity = capacity_pages
+        # insertion order == eviction order; first item = next eviction victim
+        self._list: "OrderedDict[int, None]" = OrderedDict()
+        # counters
+        self.evictions = 0
+        self.populations = 0
+
+    # -- queries -------------------------------------------------------------
+    def resident(self, page: int) -> bool:
+        return page in self._list
+
+    def resident_count(self) -> int:
+        return len(self._list)
+
+    def free_pages(self) -> int:
+        return self.capacity - len(self._list)
+
+    def eviction_order(self) -> List[int]:
+        return list(self._list.keys())
+
+    # -- driver ops ----------------------------------------------------------
+    def touch(self, page: int) -> None:
+        """LRU update on access (demand-paging behavior)."""
+        if page in self._list:
+            self._list.move_to_end(page)
+
+    def madvise(self, pages: Iterable[int]) -> int:
+        """Move resident pages to the tail (protect). Returns #moved."""
+        n = 0
+        for p in pages:
+            if p in self._list:
+                self._list.move_to_end(p)
+                n += 1
+        return n
+
+    def evict_head(self) -> int:
+        page, _ = self._list.popitem(last=False)
+        self.evictions += 1
+        return page
+
+    def populate(self, page: int) -> List[int]:
+        """Make one page resident (at the tail); returns evicted victims."""
+        if page in self._list:
+            self._list.move_to_end(page)
+            return []
+        victims = []
+        while len(self._list) >= self.capacity:
+            victims.append(self.evict_head())
+        self._list[page] = None
+        self.populations += 1
+        return victims
+
+    def migrate(self, pages: List[int]) -> Tuple[List[int], List[int]]:
+        """Proactively populate ``pages`` (in order), evicting from the head.
+
+        Returns (populated, evicted) — only pages that actually moved.
+        """
+        populated: List[int] = []
+        evicted: List[int] = []
+        for p in pages:
+            if p in self._list:
+                self._list.move_to_end(p)
+                continue
+            evicted.extend(
+                [self.evict_head() for _ in range(max(0, len(self._list) + 1 - self.capacity))]
+            )
+            self._list[p] = None
+            self.populations += 1
+            populated.append(p)
+        return populated, evicted
+
+    def drop(self, pages: Iterable[int]) -> None:
+        """Remove pages without counting an eviction (task exit/free)."""
+        for p in pages:
+            self._list.pop(p, None)

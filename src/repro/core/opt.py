@@ -1,0 +1,131 @@
+"""Belady-OPT planning over the reconstructed global access sequence (§6.2).
+
+The coordinator merges each task's *local* future command sequence (from the
+per-process helpers) with the scheduler's timeline to obtain the global order
+in which pages will be touched. Two artifacts come out of it:
+
+  * ``timeslice_page_groups`` — the page set touched within each timeline
+    entry, in timeline order. Walking these groups in *reverse* and madvising
+    each to the eviction-list tail leaves the list head holding exactly the
+    pages unreferenced for the longest time: Belady's OPT order (Fig. 4).
+  * ``first_access_order`` — pages of the next timeslice ordered by first
+    access, used by the migration pipeline for *early execution* (§6.3).
+
+``belady_reference`` is an explicit OPT cache simulator used by tests and the
+*Ideal* baseline to prove the list mechanism achieves the optimal migration
+volume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.timeline import TaskTimeline
+
+
+@dataclasses.dataclass
+class PlannedAccess:
+    task_id: int
+    seq_no: int  # command sequence number within the task
+    pages: List[int]  # page first-touch order within the command
+    latency_us: float
+
+
+@dataclasses.dataclass
+class OptPlan:
+    timeslice_page_groups: List[Set[int]]  # one per timeline entry
+    first_access_order: List[int]  # next timeslice, de-duplicated
+    global_sequence: List[List[int]]  # per global command, page lists
+
+
+def build_plan(
+    timeline: TaskTimeline,
+    task_futures: Dict[int, Sequence[PlannedAccess]],
+) -> OptPlan:
+    """Reconstruct the global access sequence by walking the timeline and
+    consuming each task's future commands up to its allocated timeslice."""
+    cursors = {tid: 0 for tid in task_futures}
+    groups: List[Set[int]] = []
+    global_seq: List[List[int]] = []
+    first_order: List[int] = []
+    first_seen: Set[int] = set()
+
+    for i, entry in enumerate(timeline):
+        group: Set[int] = set()
+        budget = entry.timeslice_us
+        future = task_futures.get(entry.task_id, ())
+        cur = cursors.get(entry.task_id, 0)
+        while cur < len(future) and budget > 0:
+            acc = future[cur]
+            group.update(acc.pages)
+            global_seq.append(list(acc.pages))
+            if i == 0:
+                for p in acc.pages:
+                    if p not in first_seen:
+                        first_seen.add(p)
+                        first_order.append(p)
+            budget -= acc.latency_us
+            cur += 1
+        cursors[entry.task_id] = cur
+        groups.append(group)
+    return OptPlan(groups, first_order, global_seq)
+
+
+def belady_eviction_order(plan: OptPlan, resident: Sequence[int]) -> List[int]:
+    """Expected eviction order under the madvise-walk: pages never referenced
+    in the horizon first, then by *decreasing* distance to next use."""
+    next_use: Dict[int, int] = {}
+    for i, group in enumerate(plan.timeslice_page_groups):
+        for p in group:
+            next_use.setdefault(p, i)
+    inf = len(plan.timeslice_page_groups) + 1
+    return sorted(
+        resident,
+        key=lambda p: -next_use.get(p, inf),
+    )
+
+
+def belady_reference(
+    accesses: Sequence[Sequence[int]],
+    capacity: int,
+    initially_resident: Optional[Set[int]] = None,
+) -> Tuple[int, int]:
+    """Exact Belady OPT cache simulation over a page-access sequence.
+
+    Returns (misses, evictions) — the minimum achievable migration volume.
+    """
+    flat: List[int] = []
+    for group in accesses:
+        flat.extend(group)
+    # next-use index table
+    next_use: Dict[int, List[int]] = {}
+    for i, p in enumerate(flat):
+        next_use.setdefault(p, []).append(i)
+    for lst in next_use.values():
+        lst.reverse()  # pop() yields the next upcoming index
+
+    resident: Set[int] = set(initially_resident or ())
+    misses = evictions = 0
+    for i, p in enumerate(flat):
+        uses = next_use[p]
+        while uses and uses[-1] <= i:
+            uses.pop()
+        if p in resident:
+            continue
+        misses += 1
+        if len(resident) >= capacity:
+            # evict the resident page with the farthest next use
+            victim, dist = None, -1.0
+            for q in resident:
+                lst = next_use.get(q)
+                while lst and lst[-1] <= i:
+                    lst.pop()
+                d = lst[-1] if lst else float("inf")
+                if d > dist:
+                    dist, victim = d, q
+                    if d == float("inf"):
+                        break
+            resident.remove(victim)
+            evictions += 1
+        resident.add(p)
+    return misses, evictions

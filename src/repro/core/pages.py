@@ -1,0 +1,97 @@
+"""Page-granular address spaces and buffers.
+
+Each task owns a virtual address space; buffers are page-aligned allocations
+(the analogue of cudaMalloc regions / framework memory pools). Extents are
+(start, size) byte ranges; pages are integer page indices global to a task.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Set, Tuple
+
+Extent = Tuple[int, int]  # (start byte, size in bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Buffer:
+    buf_id: int
+    base: int
+    size: int
+    label: str = ""
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+    def slice(self, offset: int, size: int) -> Extent:
+        assert 0 <= offset and offset + size <= self.size, (offset, size, self.size)
+        return (self.base + offset, size)
+
+
+class AddressSpace:
+    """Bump allocator with page alignment (frees recycle only at the end)."""
+
+    def __init__(self, page_size: int = 4096, base: int = 0x10_0000_0000):
+        self.page_size = page_size
+        self._next = base
+        self._next_id = 0
+        self.buffers: Dict[int, Buffer] = {}
+
+    def malloc(self, size: int, label: str = "") -> Buffer:
+        aligned = _round_up(size, self.page_size)
+        buf = Buffer(self._next_id, self._next, size, label)
+        self.buffers[buf.buf_id] = buf
+        self._next += aligned
+        self._next_id += 1
+        return buf
+
+    def free(self, buf: Buffer) -> None:
+        self.buffers.pop(buf.buf_id, None)
+
+    def find_buffer(self, addr: int) -> Buffer | None:
+        """Containing allocation for a pointer (allocation-granularity path)."""
+        for b in self.buffers.values():
+            if b.base <= addr < b.end:
+                return b
+        return None
+
+    # -- page helpers -------------------------------------------------------
+    def pages_of_extent(self, ext: Extent) -> range:
+        start, size = ext
+        if size <= 0:
+            return range(0)
+        first = start // self.page_size
+        last = (start + size - 1) // self.page_size
+        return range(first, last + 1)
+
+    def pages_of(self, extents: Iterable[Extent]) -> Set[int]:
+        pages: Set[int] = set()
+        for ext in extents:
+            pages.update(self.pages_of_extent(ext))
+        return pages
+
+    def total_pages(self) -> int:
+        return sum(_round_up(b.size, self.page_size) for b in self.buffers.values()) // self.page_size
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def merge_extents(extents: List[Extent]) -> List[Extent]:
+    """Coalesce overlapping/adjacent byte ranges (canonical trace form)."""
+    if not extents:
+        return []
+    xs = sorted(extents)
+    out = [list(xs[0])]
+    for s, sz in xs[1:]:
+        cs, csz = out[-1]
+        if s <= cs + csz:
+            out[-1][1] = max(cs + csz, s + sz) - cs
+        else:
+            out.append([s, sz])
+    return [tuple(e) for e in out]
+
+
+def extents_bytes(extents: Iterable[Extent]) -> int:
+    return sum(sz for _, sz in merge_extents(list(extents)))

@@ -1,0 +1,95 @@
+"""Task schedulers: round-robin and priority (RT/BE) policies.
+
+The scheduler owns the preemptive context switcher (XSched's TSG-based
+switching in the paper) and — crucially for MSched — *exposes its timeline*
+to the memory manager. Policies only need to produce that timeline; memory
+management is fully decoupled (paper §6.1: "the timeline … effectively
+decouples the scheduling policy from memory management").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.timeline import TaskTimeline, TimelineEntry
+
+
+@dataclasses.dataclass
+class SchedTask:
+    task_id: int
+    priority: int = 0  # higher = more urgent (RT), 0 = best-effort
+    runnable: bool = True  # has pending work
+
+
+class Policy:
+    def next_entry(self, tasks: Dict[int, SchedTask]) -> Optional[TimelineEntry]:
+        raise NotImplementedError
+
+    def timeline(self, tasks: Dict[int, SchedTask], horizon: int) -> TaskTimeline:
+        raise NotImplementedError
+
+
+class RoundRobinPolicy(Policy):
+    """Equal timeslices in fixed order — the paper's default (matches the
+    time-sharing behavior of commodity GPUs)."""
+
+    def __init__(self, quantum_us: float = 5_000.0):
+        self.quantum_us = quantum_us
+        self._rr: List[int] = []
+
+    def _order(self, tasks: Dict[int, SchedTask]) -> List[int]:
+        ids = [t for t in sorted(tasks) if tasks[t].runnable]
+        for t in ids:
+            if t not in self._rr:
+                self._rr.append(t)
+        self._rr = [t for t in self._rr if t in ids]
+        return self._rr
+
+    def next_entry(self, tasks):
+        order = self._order(tasks)
+        if not order:
+            return None
+        tid = order[0]
+        self._rr = self._rr[1:] + [tid]  # rotate
+        return TimelineEntry(tid, self.quantum_us)
+
+    def timeline(self, tasks, horizon: int = 0) -> TaskTimeline:
+        order = self._order(tasks)
+        horizon = horizon or 2 * max(len(order), 1)
+        entries = [
+            TimelineEntry(order[i % len(order)], self.quantum_us)
+            for i in range(horizon)
+        ] if order else []
+        return TaskTimeline(entries)
+
+
+class PriorityPolicy(Policy):
+    """Strict priority with RR among equals; RT preempts BE on arrival."""
+
+    def __init__(self, quantum_us: float = 5_000.0, rt_quantum_us: float = 2_000.0):
+        self.quantum_us = quantum_us
+        self.rt_quantum_us = rt_quantum_us
+        self._rr = RoundRobinPolicy(quantum_us)
+
+    def _split(self, tasks):
+        rt = {t: s for t, s in tasks.items() if s.priority > 0 and s.runnable}
+        be = {t: s for t, s in tasks.items() if s.priority == 0 and s.runnable}
+        return rt, be
+
+    def next_entry(self, tasks):
+        rt, be = self._split(tasks)
+        if rt:
+            tid = min(rt)  # deterministic among RT
+            return TimelineEntry(tid, self.rt_quantum_us)
+        if be:
+            return self._rr.next_entry(be)
+        return None
+
+    def timeline(self, tasks, horizon: int = 0) -> TaskTimeline:
+        rt, be = self._split(tasks)
+        entries: List[TimelineEntry] = []
+        for tid in sorted(rt):
+            entries.append(TimelineEntry(tid, self.rt_quantum_us))
+        be_tl = self._rr.timeline(be, horizon or 2 * max(len(be), 1))
+        entries.extend(be_tl.entries)
+        return TaskTimeline(entries)

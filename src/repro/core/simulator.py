@@ -1,0 +1,447 @@
+"""Discrete-event execution engine for multitasking under oversubscription.
+
+Runs a set of ``TaskProgram``s under a scheduling policy with one of four
+memory backends:
+
+  um      — native demand paging (CUDA UM model; §2.3)
+  msched  — proactive memory scheduling: extended context switch with
+            timeline-driven OPT placement + pipelined migration (§4–§6)
+  ideal   — theoretical optimum: ground-truth working sets, zero control
+            plane, full-duplex-cap migration, strict Belady (paper's *Ideal*)
+  suv     — single-task static-prefetch baseline (SUV, §7.5): prefetches the
+            whole task footprint on switch, oblivious to other tasks
+
+The engine models *early execution* (§6.3): a kernel starts as soon as its own
+pages are ready, not when the whole working-set migration finishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.commands import Command
+from repro.core.demand_paging import DemandPager
+from repro.core.hardware import Platform
+from repro.core.hbm import HBMPool
+from repro.core.memory_manager import Coordinator, TaskHelper
+from repro.core.migration import plan_population
+from repro.core.pages import AddressSpace
+from repro.core.predictor import (
+    AllocationPredictor,
+    OraclePredictor,
+    Predictor,
+    TemplatePredictor,
+)
+from repro.core.profiler import profile_programs
+from repro.core.scheduler import Policy, RoundRobinPolicy, SchedTask
+from repro.core.templates import analyze_traces
+from repro.core.timeline import TaskTimeline
+from repro.core.workloads import TaskProgram
+
+MIN_LOOKAHEAD_ITERS = 2  # async launch window (queued-but-not-executed)
+
+
+# --------------------------------------------------------------------------
+# Backends
+# --------------------------------------------------------------------------
+
+
+class Backend:
+    name = "base"
+
+    def on_switch(self, task_id: int, timeline: TaskTimeline, now: float):
+        return 0.0, {}
+
+    def on_command(self, cmd: Command, pages: List[int], now: float) -> float:
+        return 0.0
+
+    def faults(self) -> int:
+        return 0
+
+    def migrated_pages(self) -> int:
+        return 0
+
+
+class UMBackend(Backend):
+    name = "um"
+
+    def __init__(self, platform: Platform, pool: HBMPool, page_size: int = 0):
+        self.pager = DemandPager(platform, pool, page_size)
+
+    def on_command(self, cmd, pages, now):
+        return self.pager.access(pages)
+
+    def faults(self):
+        return self.pager.stats.faults
+
+    def migrated_pages(self):
+        return self.pager.stats.migrated_pages
+
+
+class MSchedBackend(Backend):
+    name = "msched"
+
+    def __init__(
+        self,
+        platform: Platform,
+        pool: HBMPool,
+        helpers: Dict[int, TaskHelper],
+        pipelined: bool = True,
+        control_free: bool = False,
+        page_size: int = 0,
+    ):
+        self.platform = platform
+        self.pool = pool
+        self.page_size = page_size or platform.page_size
+        self.coordinator = Coordinator(
+            platform, pool, pipelined=pipelined, page_size=page_size
+        )
+        for h in helpers.values():
+            self.coordinator.register(h)
+        self.fallback = DemandPager(platform, pool, page_size)  # false negatives
+        self.control_free = control_free
+        self._migrated = 0
+
+    def on_switch(self, task_id, timeline, now):
+        report = self.coordinator.on_context_switch(task_id, timeline)
+        self._migrated += report.populated_pages
+        ctrl = 0.0 if self.control_free else report.madvise_us
+        ready = {
+            p: now + ctrl + t for p, t in report.migration.page_ready_us.items()
+        }
+        return ctrl, ready
+
+    def on_command(self, cmd, pages, now):
+        # mispredictions fall back to standard demand paging (§5.2)
+        missing = [p for p in pages if not self.pool.resident(p)]
+        if not missing:
+            return 0.0
+        return self.fallback.access(missing)
+
+    def faults(self):
+        return self.fallback.stats.faults
+
+    def migrated_pages(self):
+        return self._migrated + self.fallback.stats.migrated_pages
+
+
+class IdealBackend(MSchedBackend):
+    """Strict-OPT upper bound: oracle prediction, no control plane, and
+    migration at the duplex bandwidth ceiling."""
+
+    name = "ideal"
+
+    def on_switch(self, task_id, timeline, now):
+        report = self.coordinator.on_context_switch(task_id, timeline)
+        self._migrated += report.populated_pages
+        # population at the physically best per-direction rate: the duplex
+        # ceiling is shared by concurrent eviction (swap = cap/2 each way,
+        # matching the paper's 63.5 GB/s pipelined swap figure)
+        rate = min(
+            self.platform.h2d_gbps * 1e3, self.platform.duplex_cap_gbps * 1e3 / 2
+        )
+        ps = self.page_size
+        ready = {}
+        for i, p in enumerate(report.migration.page_ready_us):
+            ready[p] = now + (i + 1) * ps / rate
+        return 0.0, ready
+
+
+class SUVBackend(Backend):
+    """Static-analysis single-task prefetch: on switch, prefetch the whole
+    footprint of the incoming task (hotness-ordered = buffer order), with no
+    awareness of the other tasks' residency or of the schedule."""
+
+    name = "suv"
+
+    def __init__(self, platform: Platform, pool: HBMPool, programs, page_size: int = 0):
+        self.platform = platform
+        self.pool = pool
+        self.page_size = page_size or platform.page_size
+        self.pager = DemandPager(platform, pool, page_size)
+        self._task_pages: Dict[int, List[int]] = {}
+        for prog in programs:
+            pages: List[int] = []
+            for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
+                pages.extend(prog.space.pages_of_extent((b.base, b.size)))
+            self._task_pages[prog.task_id] = pages
+        self._migrated = 0
+
+    def on_switch(self, task_id, timeline, now):
+        pages = self._task_pages.get(task_id, [])
+        # cap the prefetch at HBM capacity (driver clamps)
+        pages = pages[: self.pool.capacity]
+        populated, evicted = self.pool.migrate(pages)
+        self._migrated += len(populated)
+        mig = plan_population(
+            self.platform, populated, len(evicted), False, self.page_size
+        )
+        ready = {p: now + t for p, t in mig.page_ready_us.items()}
+        return 0.0, ready
+
+    def on_command(self, cmd, pages, now):
+        missing = [p for p in pages if not self.pool.resident(p)]
+        return self.pager.access(missing) if missing else 0.0
+
+    def faults(self):
+        return self.pager.stats.faults
+
+    def migrated_pages(self):
+        return self._migrated + self.pager.stats.migrated_pages
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TaskStats:
+    completions: int = 0
+    commands: int = 0
+    busy_us: float = 0.0
+    latencies_us: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SimResult:
+    sim_us: float
+    per_task: Dict[int, TaskStats]
+    faults: int
+    migrated_bytes: int
+    switches: int
+    control_us: float
+
+    def total_completions(self) -> int:
+        return sum(t.completions for t in self.per_task.values())
+
+    def throughput_per_s(self) -> float:
+        return self.total_completions() / (self.sim_us * 1e-6) if self.sim_us else 0.0
+
+
+class _RunTask:
+    def __init__(
+        self,
+        prog: TaskProgram,
+        helper: Optional[TaskHelper],
+        lookahead_us: float = 0.0,
+    ):
+        self.prog = prog
+        self.helper = helper
+        self.lookahead_us = lookahead_us
+        self.queue: Deque[Command] = deque()
+        self.queued_us = 0.0
+        self.iter_launched = 0
+        self.cmd_in_iter = 0
+        self.iter_len = 1
+        self.arrivals: Optional[Deque[float]] = None  # RT mode
+        self.current_arrival: Optional[float] = None
+        self.stats = TaskStats()
+        self._refill()
+
+    def _launch_iter(self):
+        cmds = self.prog.iteration(self.iter_launched)
+        self.iter_len = len(cmds)
+        for c in cmds:
+            c.seq_no = self.iter_launched
+            self.queue.append(c)
+            self.queued_us += c.latency_us
+            if self.helper is not None:
+                self.helper.launch(c)
+        self.iter_launched += 1
+
+    def _refill(self):
+        # the async launch window must cover at least one full timeslice of
+        # future commands for the timeline plan to see the whole working set
+        launched_iters = 0
+        while (
+            launched_iters < MIN_LOOKAHEAD_ITERS
+            or self.queued_us < self.lookahead_us
+        ):
+            self._launch_iter()
+            launched_iters += 1
+            if launched_iters > 10_000:
+                break
+
+    def peek(self) -> Command:
+        return self.queue[0]
+
+    def advance(self, now: float) -> bool:
+        """Consume one command; returns True when an iteration completed."""
+        cmd = self.queue.popleft()
+        self.queued_us -= cmd.latency_us
+        if self.helper is not None and len(self.helper.queue):
+            self.helper.pop()
+        self.cmd_in_iter += 1
+        done = False
+        if self.cmd_in_iter >= self.iter_len:
+            self.cmd_in_iter = 0
+            self.stats.completions += 1
+            done = True
+        if len(self.queue) < self.iter_len or self.queued_us < self.lookahead_us:
+            self._launch_iter()
+        return done
+
+    def runnable(self, now: float) -> bool:
+        if self.arrivals is None:
+            return True
+        if self.current_arrival is not None:
+            return True
+        while self.arrivals and self.arrivals[0] <= now:
+            self.current_arrival = self.arrivals.popleft()
+            return True
+        return False
+
+    def next_arrival(self) -> Optional[float]:
+        if self.arrivals is None or self.current_arrival is not None:
+            return None
+        return self.arrivals[0] if self.arrivals else None
+
+
+def make_backend(
+    name: str,
+    platform: Platform,
+    pool: HBMPool,
+    programs: Sequence[TaskProgram],
+    predictor_kind: str = "template",
+    pipelined: bool = True,
+    page_size: int = 0,
+) -> Tuple[Backend, Dict[int, TaskHelper]]:
+    helpers: Dict[int, TaskHelper] = {}
+    if name == "um":
+        return UMBackend(platform, pool, page_size), helpers
+    if name == "suv":
+        return SUVBackend(platform, pool, programs, page_size), helpers
+
+    # msched / ideal need per-task helpers with a predictor
+    if name == "ideal" or predictor_kind == "oracle":
+        predictors: Dict[int, Predictor] = {
+            p.task_id: OraclePredictor() for p in programs
+        }
+    elif predictor_kind == "allocation":
+        predictors = {p.task_id: AllocationPredictor(p.space) for p in programs}
+    else:  # template: offline profile + analyze (the real MSched flow)
+        store = profile_programs(programs, iters=4)
+        descriptors = analyze_traces(store)
+        predictors = {
+            p.task_id: TemplatePredictor(descriptors) for p in programs
+        }
+    for p in programs:
+        helpers[p.task_id] = TaskHelper(p.task_id, p.space, predictors[p.task_id])
+    cls = IdealBackend if name == "ideal" else MSchedBackend
+    backend = cls(platform, pool, helpers, pipelined=pipelined, page_size=page_size)
+    return backend, helpers
+
+
+def simulate(
+    programs: Sequence[TaskProgram],
+    platform: Platform,
+    backend_name: str = "msched",
+    capacity_bytes: Optional[int] = None,
+    sim_us: float = 2_000_000.0,
+    policy: Optional[Policy] = None,
+    predictor_kind: str = "template",
+    pipelined: bool = True,
+    arrivals: Optional[Dict[int, List[float]]] = None,
+    priorities: Optional[Dict[int, int]] = None,
+    prepopulate: bool = True,
+) -> SimResult:
+    page_size = programs[0].space.page_size
+    cap_bytes = capacity_bytes or platform.hbm_bytes
+    pool = HBMPool(max(1, cap_bytes // page_size))
+    backend, helpers = make_backend(
+        backend_name, platform, pool, programs, predictor_kind, pipelined, page_size
+    )
+    policy = policy or RoundRobinPolicy()
+
+    quantum = getattr(policy, "quantum_us", 5_000.0)
+    tasks: Dict[int, _RunTask] = {}
+    for prog in programs:
+        rt = _RunTask(prog, helpers.get(prog.task_id), lookahead_us=2.2 * quantum)
+        if arrivals and prog.task_id in arrivals:
+            rt.arrivals = deque(arrivals[prog.task_id])
+            rt.current_arrival = None
+        tasks[prog.task_id] = rt
+
+    # warm start: fill HBM fairly (tasks ran before the measuring window)
+    if prepopulate:
+        share = pool.capacity // max(1, len(programs))
+        for prog in programs:
+            pages: List[int] = []
+            for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
+                pages.extend(prog.space.pages_of_extent((b.base, b.size)))
+            for p in pages[:share]:
+                pool.populate(p)
+
+    t = 0.0
+    switches = 0
+    control_us = 0.0
+    while t < sim_us:
+        sched = {
+            tid: SchedTask(
+                tid,
+                priority=(priorities or {}).get(tid, 0),
+                runnable=rt.runnable(t),
+            )
+            for tid, rt in tasks.items()
+        }
+        entry = policy.next_entry(sched)
+        if entry is None:
+            # idle until next arrival
+            nxt = [rt.next_arrival() for rt in tasks.values()]
+            nxt = [x for x in nxt if x is not None]
+            if not nxt:
+                break
+            t = max(t, min(nxt))
+            continue
+        # the timeline's first entry must be the task about to run —
+        # next_entry() already rotated the policy's run queue past it
+        timeline = TaskTimeline([entry] + policy.timeline(sched).entries)
+        ctrl, ready = backend.on_switch(entry.task_id, timeline, t)
+        t += ctrl
+        control_us += ctrl
+        switches += 1
+
+        rt = tasks[entry.task_id]
+        budget = entry.timeslice_us
+        slice_start = t
+        while budget > 0 and rt.runnable(t):
+            cmd = rt.peek()
+            pages = _true_page_order(rt.prog.space, cmd)
+            start = t
+            for p in pages:
+                r = ready.get(p)
+                if r is not None and r > start:
+                    start = r
+            stall = backend.on_command(cmd, pages, start)
+            end = start + stall + cmd.latency_us
+            rt.stats.commands += 1
+            rt.stats.busy_us += end - t
+            budget -= end - t
+            t = end
+            completed = rt.advance(t)
+            if completed and rt.current_arrival is not None:
+                rt.stats.latencies_us.append(t - rt.current_arrival)
+                rt.current_arrival = None
+                # next pending arrival (if already due) picked up by runnable()
+
+    return SimResult(
+        sim_us=t,
+        per_task={tid: rt.stats for tid, rt in tasks.items()},
+        faults=backend.faults(),
+        migrated_bytes=backend.migrated_pages() * page_size,
+        switches=switches,
+        control_us=control_us,
+    )
+
+
+def _true_page_order(space: AddressSpace, cmd: Command) -> List[int]:
+    seen = set()
+    order = []
+    for ext in cmd.true_extents:
+        for p in space.pages_of_extent(ext):
+            if p not in seen:
+                seen.add(p)
+                order.append(p)
+    return order

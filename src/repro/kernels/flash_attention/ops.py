@@ -1,0 +1,19 @@
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv")
+)
+def flash_attention(q, k, v, causal=True, window=0, block_q=256, block_kv=256):
+    return kernel.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, interpret=not _on_tpu(),
+    )

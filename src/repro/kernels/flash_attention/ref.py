@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: exact attention with causal/window masks + GQA."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal=True, window=0, sm_scale=None):
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf * sm_scale, kf)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = qpos >= kpos
+    if window > 0:
+        mask = jnp.logical_and(mask, (qpos - kpos) < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, vf)
+    return o.reshape(b, sq, h, d).astype(q.dtype)

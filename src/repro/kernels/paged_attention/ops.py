@@ -1,0 +1,16 @@
+import functools
+
+import jax
+
+from repro.kernels.paged_attention import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def paged_attention(q, pool_k, pool_v, page_table, lengths):
+    return kernel.paged_attention(
+        q, pool_k, pool_v, page_table, lengths, interpret=not _on_tpu()
+    )

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: gather pages, run exact masked attention."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, pool_k, pool_v, page_table, lengths, sm_scale=None):
+    b, h, d = q.shape
+    n_pages, pt, hkv, _ = pool_k.shape
+    g = h // hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    max_pages = page_table.shape[1]
+    k = pool_k[page_table]  # (b, max_pages, pt, hkv, d)
+    v = pool_v[page_table]
+    k = k.reshape(b, max_pages * pt, hkv, d).astype(jnp.float32)
+    v = v.reshape(b, max_pages * pt, hkv, d).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf * sm_scale, k)
+    pos = jnp.arange(max_pages * pt)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return o.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Jitted public entry points; interpret mode auto-selected off-TPU."""
+import functools
+
+import jax
+
+from repro.kernels.streammm import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def stream_matmul(x, w, block_m=256, block_n=256, block_k=512):
+    return kernel.stream_matmul(
+        x, w, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def stream_matmul_int8(x, w_q, scales, block_m=256, block_n=256, block_k=512):
+    return kernel.stream_matmul_int8(
+        x, w_q, scales, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=not _on_tpu(),
+    )

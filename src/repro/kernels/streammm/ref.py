@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the weight-streaming matmul."""
+import jax.numpy as jnp
+
+
+def stream_matmul_ref(x, w, out_dtype=jnp.bfloat16):
+    return (
+        x.astype(jnp.float32) @ w.astype(jnp.float32)
+    ).astype(out_dtype)
+
+
+def stream_matmul_int8_ref(x, w_q, scales, block_k, out_dtype=jnp.bfloat16):
+    wf = w_q.astype(jnp.float32) * jnp.repeat(scales, block_k, axis=0)
+    return (x.astype(jnp.float32) @ wf).astype(out_dtype)

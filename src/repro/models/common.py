@@ -1,0 +1,184 @@
+"""Shared model building blocks (pure-functional, pytree params)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+PyTree = object
+
+
+def dtype_of(cfg: ModelConfig):
+    # int8 configs (paper llama.cpp workload) still compute in bf16; int8 is
+    # the storage dtype handled by the quantized kernels / workload model.
+    return jnp.bfloat16 if cfg.dtype in ("bfloat16", "int8") else jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Normalization
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions3: (3, B, S) — (temporal, height, width) position
+    ids; sections: per-axis rotary section sizes (sum == D // 2).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # build per-frequency angles by selecting the positional axis per section
+    angle_parts = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        f = freqs[start : start + sec]
+        pos = positions3[axis]  # (B, S)
+        angle_parts.append(pos[..., None].astype(jnp.float32) * f)
+        start += sec
+    angles = jnp.concatenate(angle_parts, axis=-1)  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention core (exact, memory-bounded via query-block scan)
+# --------------------------------------------------------------------------
+
+
+def gqa_scores_einsum(q, k):
+    """q: (B, S, H, D), k: (B, T, Hkv, D) -> scores (B, H, S, T) for GQA."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    groups = h // hkv
+    qg = q.reshape(b, s, hkv, groups, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k)
+    return scores.reshape(b, h, s, k.shape[1])
+
+
+def gqa_values_einsum(probs, v):
+    """probs: (B, H, S, T), v: (B, T, Hkv, D) -> (B, S, H, D)."""
+    b, h, s, t = probs.shape
+    hkv = v.shape[2]
+    groups = h // hkv
+    pg = probs.reshape(b, hkv, groups, s, t)
+    out = jnp.einsum("bkgst,btkd->bskgd", pg, v)
+    return out.reshape(b, s, h, out.shape[-1])
+
+
+def masked_softmax(scores, mask):
+    scores = scores.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask, scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    e = jnp.where(mask, e, 0.0)
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)
+
+
+def attend(
+    q,
+    k,
+    v,
+    *,
+    q_positions,
+    kv_positions,
+    causal: bool,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_block: int = 1024,
+):
+    """Exact attention; scans over query blocks when S_q is large so the
+    (B, H, Sq, Skv) score tensor never materializes in full.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D)
+    q_positions: (B, Sq) int32; kv_positions: (B, Skv) int32 (−1 = invalid slot)
+    """
+    b, sq, h, d = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    def block(qb, qpos_b):
+        scores = gqa_scores_einsum(qb * scale, k)  # (B, H, sb, Skv)
+        valid = (kv_positions >= 0)[:, None, None, :]
+        if causal:
+            mask = qpos_b[:, None, :, None] >= kv_positions[:, None, None, :]
+        else:
+            mask = jnp.ones(
+                (b, 1, qb.shape[1], kv_positions.shape[1]), dtype=bool
+            )
+        if window is not None:
+            near = (
+                qpos_b[:, None, :, None] - kv_positions[:, None, None, :]
+            ) < window
+            mask = jnp.logical_and(mask, near)
+        mask = jnp.logical_and(mask, valid)
+        probs = masked_softmax(scores, mask).astype(v.dtype)
+        return gqa_values_einsum(probs, v)
+
+    if sq <= q_block:
+        return block(q, q_positions)
+
+    assert sq % q_block == 0, (sq, q_block)
+    nb = sq // q_block
+    qs = q.reshape(b, nb, q_block, h, d).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(b, nb, q_block).transpose(1, 0, 2)
+
+    def body(_, xs):
+        qb, pb = xs
+        return None, block(qb, pb)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    # outs: (nb, B, q_block, H, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)

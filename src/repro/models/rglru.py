@@ -1,0 +1,112 @@
+"""RecurrentGemma / Griffin recurrent block: conv + RG-LRU gated recurrence.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t)            (recurrence gate)
+    i_t = sigmoid(W_x x_t)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form uses ``jax.lax.associative_scan`` over (a, b) pairs for
+parallel-in-time execution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init
+
+RGLRU_C = 8.0
+
+
+def init_rec_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, d), dt),  # recurrent branch input proj
+        "w_gate_branch": dense_init(ks[1], (d, d), dt),  # multiplicative branch
+        "conv_w": dense_init(ks[2], (cfg.rglru.conv_width, d), dt, fan_in=4),
+        "conv_b": jnp.zeros((d,), dt),
+        "w_a": dense_init(ks[3], (d, d), dt),
+        "w_x": dense_init(ks[4], (d, d), dt),
+        "lam": jnp.full((d,), 0.65, jnp.float32),  # Lambda (softplus-domain)
+        "w_out": dense_init(ks[5], (d, d), dt),
+    }
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xb, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xb, p["w_x"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,D) float32
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32)
+    )
+    return a, gated_in
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a/b: (B, S, D) f32."""
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rec_block_apply(p, x, cfg: ModelConfig, h0=None):
+    """x: (B, S, D) -> (out, h_last)."""
+    xr = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xg = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate_branch"]))
+    # causal depthwise conv on the recurrent branch
+    width = p["conv_w"].shape[0]
+    pad = jnp.pad(xr, ((0, 0), (width - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + xr.shape[1], :] * p["conv_w"][i] for i in range(width)
+    )
+    xb = conv + p["conv_b"]
+    a, gated_in = _gates(p, xb)
+    h = rglru_scan(a, gated_in, h0)
+    out = (h.astype(x.dtype) * xg).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, p["w_out"])
+    return out, h[:, -1, :]
+
+
+def conv_tail(p, x):
+    """Last (width-1) pre-conv recurrent-branch inputs, for decode carry-over.
+
+    x: the *normed* block input (B, S, D).
+    """
+    width = p["conv_w"].shape[0]
+    xr = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    return xr[:, -(width - 1) :, :]
+
+
+def rec_block_decode(p, x, h_prev, cfg: ModelConfig, conv_state=None):
+    """One-token step. x: (B, 1, D); h_prev: (B, D) f32.
+
+    conv_state: (B, width-1, D) trailing conv inputs (or None for width-1
+    zeros, e.g. at sequence start).
+    """
+    xr = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xg = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate_branch"]))
+    width = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, xr.shape[-1]), xr.dtype)
+    hist = jnp.concatenate([conv_state, xr], axis=1)  # (B, width, D)
+    new_conv = hist[:, 1:, :]
+    xb = (jnp.einsum("bwd,wd->bd", hist, p["conv_w"]) + p["conv_b"])[:, None, :]
+    a, gated_in = _gates(p, xb)
+    h = a[:, 0] * h_prev + gated_in[:, 0]  # (B, D)
+    out = (h[:, None, :].astype(x.dtype) * xg).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, p["w_out"])
+    return out, h, new_conv

@@ -1,0 +1,187 @@
+"""Mamba2 / SSD (state-space duality) block — chunked parallel form + decode.
+
+Faithful to arXiv:2405.21060: within-chunk quadratic ("attention-like") term +
+across-chunk recurrent state passing, which is the SSD algorithm. Single
+group (B/C shared across heads), depthwise causal conv over (x, B, C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = dims(cfg)
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.state_dim + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dt),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), dt, fan_in=s.conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "gate_norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_inner, d), dt),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, n_heads, _ = dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + d_inner + 2 * s.state_dim]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along S. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):  # width is tiny (4); unrolled taps
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return out + b
+
+
+def ssm_apply(p, x, cfg: ModelConfig):
+    out, _ = _ssm_core(p, x, cfg)
+    return out
+
+
+def ssm_apply_with_state(p, x, cfg: ModelConfig):
+    """Like ``ssm_apply`` but also returns the decode-continuation cache
+    {'state': (B,H,hd,ns) f32, 'conv': (B,width-1,conv_dim)}."""
+    return _ssm_core(p, x, cfg)
+
+
+def _ssm_core(p, x, cfg: ModelConfig):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D). S % chunk == 0.
+
+    Scans over chunks (carrying the inter-chunk state) so only one chunk's
+    quadratic (Q × Q × heads) decay tensor is live at a time — the fully
+    vectorized form would materialize (B, S/Q, Q, Q, H) and blow past
+    per-device HBM at the assigned train_4k scale.
+    """
+    s_cfg = cfg.ssm
+    d_inner, n_heads, _ = dims(cfg)
+    hd, ns, q = s_cfg.head_dim, s_cfg.state_dim, s_cfg.chunk
+    b, s_orig, _ = x.shape
+    # pad S to a chunk multiple; padded positions get dt == 0 so they neither
+    # decay nor update the carried state (prefill cache stays exact)
+    pad = (-s_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_raw, dt = _split_proj(proj, cfg)
+    conv_tail = xbc_raw[:, : s_orig, :][:, -(s_cfg.conv_width - 1) :, :]
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner : d_inner + ns].astype(jnp.float32)
+    Cm = xbc[..., d_inner + ns :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if pad:
+        valid = (jnp.arange(s) < s_orig)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    dA = dt * A  # (B,S,H)
+
+    xh = xs.reshape(b, s, n_heads, hd).astype(jnp.float32)
+    # chunked views, chunk-major for the scan
+    dAc = dA.reshape(b, nc, q, n_heads).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, q, n_heads).transpose(1, 0, 2, 3)
+    xc = xh.reshape(b, nc, q, n_heads, hd).transpose(1, 0, 2, 3, 4)
+    Bc = Bm.reshape(b, nc, q, ns).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(b, nc, q, ns).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(state, inp):
+        dac, dtk, xk, bk, ck = inp  # per-chunk slices (B, Q, ...)
+        cum = jnp.cumsum(dac, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: M[i,j] = exp(cum_i - cum_j) for i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Qi,Qj,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bis,bjs->bij", ck, bk)  # (B,Qi,Qj)
+        m = cb[..., None] * decay  # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", m, dtk, xk)
+        # inter-chunk: contribution of the entering state
+        y_inter = jnp.einsum("bis,bih,bhps->bihp", ck, jnp.exp(cum), state)
+        # state update to chunk exit
+        seg = jnp.exp(cum[:, -1:, :] - cum)  # decay from j to chunk end
+        st_new = jnp.einsum("bjs,bjh,bjh,bjhp->bhps", bk, dtk, seg, xk)
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + st_new
+        return state, y_intra + y_inter
+
+    init = jnp.zeros((b, n_heads, hd, ns), jnp.float32)
+    final_state, ys = jax.lax.scan(chunk_step, init, (dAc, dtc, xc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, n_heads, hd)
+
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    if pad:
+        out = out[:, :s_orig, :]
+    return out, {"state": final_state, "conv": conv_tail}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = dims(cfg)
+    return {
+        "state": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(p, x, cache, cfg: ModelConfig):
+    """Single-token recurrence. x: (B, 1, D)."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads, conv_dim = dims(cfg)
+    hd, ns = s_cfg.head_dim, s_cfg.state_dim
+    b = x.shape[0]
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(proj, cfg)  # xbc: (B,1,conv_dim)
+    conv_hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    new_conv = conv_hist[:, 1:, :]
+    conv_out = jnp.einsum("bwc,wc->bc", conv_hist, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :]
+
+    xs = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner : d_inner + ns].astype(jnp.float32)[:, 0]  # (B,ns)
+    Cm = xbc[..., d_inner + ns :].astype(jnp.float32)[:, 0]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)  # (B,H)
+
+    xh = xs.reshape(b, n_heads, hd).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bs->bhps", dt, xh, Bm)
+    state = cache["state"] * da[:, :, None, None] + upd
+    y = jnp.einsum("bs,bhps->bhp", Cm, state) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"state": state, "conv": new_conv}

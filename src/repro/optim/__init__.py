@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    sgd,
+    get_optimizer,
+)
+from repro.optim.schedules import cosine_schedule, get_schedule, wsd_schedule  # noqa: F401

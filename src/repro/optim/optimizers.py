@@ -1,0 +1,163 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+AdamW for most archs; Adafactor (factored second moment) for the ≥300 B MoEs
+where AdamW state (12 B/param) would exceed 16 GB/chip on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable  # params -> opt_state
+    update: Callable  # (grads, opt_state, params, lr) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), tree
+    )
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": _tree_zeros_like(params, jnp.float32)}
+        return {}
+
+    def update(grads, state, params, lr):
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+            )
+            new = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+            return new, {"mu": mu}
+        new = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params, jnp.float32),
+            "v": _tree_zeros_like(params, jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1**c
+        bc2 = 1 - b2**c
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern, 2018), no momentum."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"vr": row, "vc": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "state": jax.tree.map(per_leaf, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-decay)
+
+        def per_leaf(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps
+                )
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * u
+            if weight_decay:
+                newp = newp - lr * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["state"])
+        out = [per_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, {"state": new_s, "count": count}
+
+    return Optimizer("adafactor", init, update)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    if name == "sgd":
+        return sgd()
+    raise KeyError(name)

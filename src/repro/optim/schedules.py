@@ -1,0 +1,50 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(
+    peak_lr: float,
+    warmup: int,
+    total: int,
+    decay_frac: float = 0.1,
+    min_ratio: float = 0.01,
+):
+    """Warmup → Stable (constant) → Decay (last ``decay_frac`` of steps).
+
+    MiniCPM's schedule: the stable phase keeps peak LR; the decay phase drops
+    exponentially/linearly to ``min_ratio * peak``. We use linear decay.
+    """
+    decay_steps = max(int(total * decay_frac), 1)
+    decay_start = total - decay_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        decay = peak_lr * (1.0 - (1.0 - min_ratio) * frac)
+        stable = jnp.full_like(step, peak_lr)
+        out = jnp.where(step < warmup, warm, jnp.where(step < decay_start, stable, decay))
+        return out
+
+    return lr
+
+
+def get_schedule(name: str, peak_lr: float, warmup: int, total: int):
+    if name == "cosine":
+        return cosine_schedule(peak_lr, warmup, total)
+    if name == "wsd":
+        return wsd_schedule(peak_lr, warmup, total)
+    raise KeyError(name)

@@ -1,0 +1,50 @@
+"""Int8 gradient compression with error feedback for the DP axis.
+
+At 1000+ nodes the gradient all-reduce over DCN (the ``pod`` axis) is the
+scaling bottleneck; quantizing to int8 cuts that traffic 4x (bf16) with an
+error-feedback accumulator preserving convergence (1-bit-Adam-style residual
+carrying). Applied as a gradient transform around the optimizer update —
+composes with any optimizer and with GSPMD (the quantized tree reduces with
+the same shardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any, dict]:
+    """Returns (decompressed grads as the optimizer sees them, new error
+    feedback state, stats). The quantize->dequantize round trip models the
+    wire format; on a real fleet the int8 tree is what crosses DCN."""
+
+    def per_leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [per_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_e = treedef.unflatten([o[1] for o in out])
+    orig_bytes = sum(g.size * g.dtype.itemsize for g in flat_g)
+    wire_bytes = sum(g.size * 1 + 4 for g in flat_g)
+    return new_g, new_e, {"compression_ratio": orig_bytes / max(wire_bytes, 1)}

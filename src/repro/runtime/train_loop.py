@@ -1,0 +1,147 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler mitigation,
+failure injection, and elastic re-mesh.
+
+Designed for thousands-of-nodes operation:
+  * periodic async checkpoints (serialization overlapped with compute),
+  * restart-from-latest on failure (``TrainSupervisor.run`` survives injected
+    faults and resumes bit-exact thanks to the stateless data pipeline),
+  * straggler mitigation: per-step deadline watchdog — steps exceeding
+    ``straggler_factor`` x the rolling median are logged and counted so the
+    orchestrator can re-slice (on CPU we record; on real fleets this signal
+    feeds the MSched scheduler's timeline, which deprioritizes the slow pod),
+  * elastic re-mesh: checkpoints are mesh-agnostic, so ``run`` can be invoked
+    again with a different mesh and continue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpointing.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data.pipeline import TokenPipeline, pipeline_for
+from repro.launch.steps import make_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_step: int
+    losses: List[float]
+    restarts: int
+    straggler_steps: int
+    checkpoints: int
+
+
+class FailureInjector:
+    """Deterministic fault injection for tests: raises at given steps."""
+
+    def __init__(self, fail_at: Optional[List[int]] = None):
+        self.fail_at = set(fail_at or [])
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+class TrainSupervisor:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: ShapeSpec,
+        ckpt_dir: str,
+        mesh=None,
+        shardings=None,
+        ckpt_every: int = 10,
+        straggler_factor: float = 3.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.ckpt_dir = ckpt_dir
+        self.mesh = mesh
+        self.shardings = shardings
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.pipeline: TokenPipeline = pipeline_for(cfg, shape, seed)
+        self.seed = seed
+
+    def _init_state(self):
+        state = make_train_state(self.cfg, jax.random.PRNGKey(self.seed))
+        if self.shardings is not None:
+            state = jax.device_put(state, self.shardings)
+        return state
+
+    def _jit_step(self):
+        step_fn = make_train_step(self.cfg)
+        if self.shardings is not None:
+            return jax.jit(step_fn, donate_argnums=(0,))
+        return jax.jit(step_fn, donate_argnums=(0,))
+
+    def run(
+        self,
+        total_steps: int,
+        injector: Optional[FailureInjector] = None,
+        max_restarts: int = 3,
+    ) -> TrainReport:
+        restarts = 0
+        report = TrainReport(0, 0, [], 0, 0, 0)
+        while True:
+            try:
+                self._run_once(total_steps, injector, report)
+                return report
+            except RuntimeError as e:
+                if "injected node failure" not in str(e) or restarts >= max_restarts:
+                    raise
+                restarts += 1
+                report.restarts = restarts
+
+    def _run_once(self, total_steps, injector, report: TrainReport) -> None:
+        ckpt = AsyncCheckpointer(self.ckpt_dir)
+        step_fn = self._jit_step()
+        start = latest_step(self.ckpt_dir)
+        if start is not None:
+            target = jax.eval_shape(self._init_state)
+            if self.shardings is not None:
+                target = jax.tree.map(
+                    lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                    target,
+                    self.shardings,
+                )
+            state = restore(self.ckpt_dir, start, target)
+            step = start
+        else:
+            state = self._init_state()
+            step = 0
+
+        durations: List[float] = []
+        while step < total_steps:
+            if injector is not None:
+                injector.maybe_fail(step)
+            batch = {
+                k: jax.numpy.asarray(v) for k, v in self.pipeline.batch(step).items()
+            }
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            durations.append(dt)
+            if len(durations) >= 5:
+                med = statistics.median(durations[-20:])
+                if dt > self.straggler_factor * med:
+                    report.straggler_steps += 1
+            report.losses.append(loss)
+            report.steps_run += 1
+            step += 1
+            report.final_step = step
+            if step % self.ckpt_every == 0 or step == total_steps:
+                ckpt.save_async(step, state)
+                report.checkpoints += 1
+        ckpt.wait()

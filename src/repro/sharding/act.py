@@ -1,0 +1,90 @@
+"""Activation sharding constraints.
+
+GSPMD propagates parameter shardings well, but scan carries and gather
+outputs can silently resolve to replicated — at trillion-parameter scale that
+turns per-device activations into global ones (we measured 74 GB/device of
+batch-replicated logits before constraining). Launchers install the mesh via
+``use_activation_mesh``; model code sprinkles ``constrain`` calls with
+logical axes. Without an installed mesh (unit tests, single-device smoke
+runs) ``constrain`` is a no-op.
+
+Logical axes: "dp" (batch: pod+data), "tp" (model), None (replicated).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_activation_mesh(mesh):
+    prev = _current()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(mesh, axis: Optional[str]):
+    if axis is None:
+        return None
+    if axis == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if len(axes) > 1 else axes[0]
+    if axis == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return axis if axis in mesh.axis_names else None
+
+
+def axis_size(axis: str) -> int:
+    """Size of a logical axis in the installed mesh (0 when no mesh)."""
+    mesh = _current()
+    if mesh is None:
+        return 0
+    r = _resolve(mesh, axis)
+    if r is None:
+        return 0
+    n = 1
+    for a in (r if isinstance(r, tuple) else (r,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *logical_axes):
+    """Constrain ``x`` (or return it untouched when no mesh is installed).
+
+    Axes whose size does not divide the corresponding dimension are dropped
+    (GSPMD would pad; we prefer explicit replication there).
+    """
+    mesh = _current()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, logical_axes):
+        r = _resolve(mesh, ax)
+        if r is None:
+            spec.append(None)
+            continue
+        n = 1
+        for a in (r if isinstance(r, tuple) else (r,)):
+            n *= mesh.shape[a]
+        spec.append(r if dim % n == 0 else None)
+    if all(s is None for s in spec):
+        # nothing shardable: leave GSPMD free — an explicit all-None spec
+        # would force REPLICATION (measured 8.8x compiled-FLOPs inflation on
+        # grok-1's 8-expert tensors under a 16-way model axis)
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

@@ -1,0 +1,7 @@
+"""Make `pytest tests/` work without PYTHONPATH=src (harmless with it)."""
+import os
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,126 @@
+"""System-behaviour tests for the multitasking simulator: the paper's key
+claims must hold as *invariants*, not just as benchmark numbers."""
+import pytest
+
+from repro.core.hardware import RTX3080, RTX5080
+from repro.core.migration import effective_swap_bandwidth_gbps, migrate_time_us
+from repro.core.scheduler import PriorityPolicy, RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import LLMDecodeTask, MatMulTask, VecAddTask
+
+
+@pytest.fixture(scope="module")
+def llm_pair():
+    return [
+        LLMDecodeTask(0, page_size=1 << 20, max_context=1024),
+        LLMDecodeTask(1, page_size=1 << 20, max_context=1024),
+    ]
+
+
+def _thr(progs, backend, cap_ratio, quantum=350_000.0, **kw):
+    foot = sum(p.footprint_bytes() for p in progs)
+    res = simulate(
+        progs,
+        RTX5080,
+        backend,
+        capacity_bytes=int(foot / cap_ratio),
+        sim_us=2_000_000,
+        policy=RoundRobinPolicy(quantum),
+        **kw,
+    )
+    return res
+
+
+def test_no_oversubscription_negligible_overhead(llm_pair):
+    """At 100% subscription MSched must retain ~all of the UM throughput
+    (paper: 99.41%)."""
+    um = _thr(llm_pair, "um", 0.95).throughput_per_s()
+    ms = _thr(llm_pair, "msched", 0.95).throughput_per_s()
+    assert ms >= 0.97 * um
+
+
+def test_msched_beats_um_under_pressure():
+    # three instances as in the paper's D-Light (UM's LRU survives 2-task
+    # round-robin but collapses at >=3-way interleaving)
+    progs = [
+        LLMDecodeTask(i, page_size=1 << 20, max_context=1024) for i in range(3)
+    ]
+    um = _thr(progs, "um", 1.5, quantum=2_000.0).throughput_per_s()
+    ms = _thr(progs, "msched", 1.5).throughput_per_s()
+    assert ms > 5 * um, (ms, um)
+
+
+def test_msched_near_ideal(llm_pair):
+    ms = _thr(llm_pair, "msched", 1.5).throughput_per_s()
+    ideal = _thr(llm_pair, "ideal", 1.5).throughput_per_s()
+    assert ms >= 0.85 * ideal
+
+
+def test_msched_eliminates_faults(llm_pair):
+    """Proactive scheduling leaves only sporadic faults (predictor F−≈0)."""
+    um = _thr(llm_pair, "um", 1.5, quantum=2_000.0)
+    ms = _thr(llm_pair, "msched", 1.5)
+    assert um.faults > 1000
+    assert ms.faults <= um.faults / 100
+
+
+def test_allocation_prediction_inflates_migration(llm_pair):
+    """Fig. 8: allocation-granularity prediction wastes bandwidth (per-step
+    migration inflation) and under heavy pressure over-prediction displaces
+    the active working set — the paper's 15.67x throughput collapse."""
+    tmpl = _thr(llm_pair, "msched", 1.3, quantum=5_000.0)
+    alloc = _thr(llm_pair, "msched", 1.3, quantum=5_000.0, predictor_kind="allocation")
+    per_step = lambda r: r.migrated_bytes / max(r.total_completions(), 1)
+    assert per_step(alloc) >= 1.15 * per_step(tmpl), (
+        per_step(alloc),
+        per_step(tmpl),
+    )
+    assert tmpl.throughput_per_s() >= alloc.throughput_per_s()
+
+    # heavy pressure: the over-predicted working set exceeds capacity and
+    # displaces itself — throughput collapses
+    tmpl_h = _thr(llm_pair, "msched", 2.0, quantum=5_000.0)
+    alloc_h = _thr(llm_pair, "msched", 2.0, quantum=5_000.0, predictor_kind="allocation")
+    assert alloc_h.throughput_per_s() <= 0.5 * tmpl_h.throughput_per_s()
+
+
+def test_pipelined_migration_speedup():
+    """Fig. 9a: full-duplex pipelining beats serialized swap by ~1.5-1.8x."""
+    for platform, lo, hi in ((RTX5080, 1.3, 1.8), (RTX3080, 1.5, 2.0)):
+        n = 256 << 20
+        plain = effective_swap_bandwidth_gbps(platform, n, pipelined=False)
+        piped = effective_swap_bandwidth_gbps(platform, n, pipelined=True)
+        assert lo <= piped / plain <= hi, (platform.name, piped / plain)
+
+
+def test_pipeline_monotone_in_bytes():
+    t1 = migrate_time_us(RTX5080, 1 << 20, 1 << 20)
+    t2 = migrate_time_us(RTX5080, 2 << 20, 2 << 20)
+    assert t2 > t1
+
+
+def test_priority_policy_rt_latency():
+    """Fig. 13: under priority scheduling, RT latency is bounded while BE
+    still makes progress."""
+    rt = MatMulTask(0, dim=1024, n_matrices=4, page_size=256 << 10)
+    be = VecAddTask(1, n_bytes=64 << 20, page_size=256 << 10)
+    arrivals = {0: [float(i * 200_000) for i in range(8)]}
+    foot = rt.footprint_bytes() + be.footprint_bytes()
+    res = simulate(
+        [rt, be],
+        RTX5080,
+        "msched",
+        capacity_bytes=int(foot / 1.5),
+        sim_us=1_800_000,
+        policy=PriorityPolicy(quantum_us=50_000.0),
+        arrivals=arrivals,
+        priorities={0: 10, 1: 0},
+    )
+    assert res.per_task[0].latencies_us, "RT requests must complete"
+    assert res.per_task[1].completions > 0, "BE must not starve"
+
+
+def test_throughput_scales_with_capacity(llm_pair):
+    t_low = _thr(llm_pair, "msched", 2.0).throughput_per_s()
+    t_high = _thr(llm_pair, "msched", 1.2).throughput_per_s()
+    assert t_high >= t_low

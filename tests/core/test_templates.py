@@ -1,0 +1,151 @@
+"""Unit + property tests for the template analyzer (paper §5.2)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.commands import kernel
+from repro.core.pages import AddressSpace
+from repro.core.predictor import TemplatePredictor, evaluate_accuracy
+from repro.core.templates import (
+    OPAQUE,
+    T1_FIXED,
+    T2_LINEAR,
+    T3_STRIDED,
+    analyze_kernel,
+    analyze_traces,
+)
+from repro.core.trace import TraceStore
+
+
+def _record(store, space, name, args, extents, lat=10.0):
+    store.record(kernel(name, args, lat, extents), space=space)
+
+
+def test_t1_fixed_size():
+    space = AddressSpace(4096)
+    buf = space.malloc(1 << 20)
+    store = TraceStore()
+    for i in range(4):
+        _record(store, space, "k", (buf.base, 7 + i), [(buf.base, 64 << 10)])
+    desc = analyze_kernel("k", store.by_kernel["k"])
+    [f] = desc.formulas
+    assert f.kind == T1_FIXED
+    assert f.predict_extents((buf.base, 99)) == [(buf.base, 64 << 10)]
+
+
+def test_t2_linear_single_arg():
+    space = AddressSpace(4096)
+    buf = space.malloc(8 << 20)
+    store = TraceStore()
+    for n in (100, 200, 300):
+        _record(store, space, "k", (buf.base, n), [(buf.base, 4 * n)])
+    desc = analyze_kernel("k", store.by_kernel["k"])
+    [f] = desc.formulas
+    assert f.kind == T2_LINEAR
+    assert f.predict_extents((buf.base, 500)) == [(buf.base, 2000)]
+
+
+def test_t2_linear_product_of_args():
+    space = AddressSpace(4096)
+    buf = space.malloc(64 << 20)
+    store = TraceStore()
+    for m, n in ((8, 16), (4, 4), (32, 8)):
+        _record(store, space, "mm", (buf.base, m, n), [(buf.base, 2 * m * n)])
+    desc = analyze_kernel("mm", store.by_kernel["mm"])
+    [f] = desc.formulas
+    assert f.kind == T2_LINEAR
+    assert f.predict_extents((buf.base, 10, 10)) == [(buf.base, 200)]
+
+
+def test_t3_strided():
+    space = AddressSpace(4096)
+    buf = space.malloc(64 << 20)
+    store = TraceStore()
+    for rows in (4, 8, 16):
+        ext = [(buf.base + r * 65536, 1024) for r in range(rows)]
+        _record(store, space, "st", (buf.base, rows, 1024, 65536), ext)
+    desc = analyze_kernel("st", store.by_kernel["st"])
+    [f] = desc.formulas
+    assert f.kind == T3_STRIDED
+    pred = f.predict_extents((buf.base, 3, 1024, 65536))
+    assert pred == [(buf.base + r * 65536, 1024) for r in range(3)]
+
+
+def test_t3_merged_degenerate_invocation():
+    """When stride == chunk size the trace merges to one extent; the fitted
+    formula must still verify against it (the dwt2d level-0 case)."""
+    space = AddressSpace(4096)
+    buf = space.malloc(64 << 20)
+    store = TraceStore()
+    for rows, size, stride in ((8, 4096, 8192), (16, 2048, 8192), (4, 8192, 8192)):
+        ext = [(buf.base + r * stride, size) for r in range(rows)]
+        _record(store, space, "st", (buf.base, rows, size, stride), ext)
+    desc = analyze_kernel("st", store.by_kernel["st"])
+    [f] = desc.formulas
+    assert f.kind == T3_STRIDED
+
+
+def test_indirect_access_is_opaque():
+    space = AddressSpace(4096)
+    a = space.malloc(1 << 20)
+    hidden = space.malloc(1 << 20)
+    store = TraceStore()
+    for i in range(3):
+        _record(
+            store,
+            space,
+            "k",
+            (a.base, 5),
+            [(a.base, 4096), (hidden.base + 4096 * (i * 7 % 5), 4096)],
+        )
+    desc = analyze_kernel("k", store.by_kernel["k"])
+    assert desc.has_opaque()
+    kinds = {f.kind for f in desc.formulas}
+    assert T1_FIXED in kinds and OPAQUE in kinds
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    coeff=st.integers(min_value=1, max_value=64),
+    vals=st.lists(
+        st.integers(min_value=1, max_value=4096), min_size=3, max_size=6, unique=True
+    ),
+)
+def test_property_linear_recovery(coeff, vals):
+    """Any exact size = coeff * arg relationship is recovered and extrapolates."""
+    space = AddressSpace(4096)
+    buf = space.malloc(coeff * 4096 * 2 + (1 << 20))
+    store = TraceStore()
+    for v in vals:
+        _record(store, space, "k", (buf.base, v), [(buf.base, min(coeff * v, buf.size))])
+    # keep within the buffer
+    if any(coeff * v > buf.size for v in vals):
+        return
+    desc = analyze_kernel("k", store.by_kernel["k"])
+    [f] = desc.formulas
+    unseen = max(vals) + 1
+    if coeff * unseen <= buf.size:
+        assert f.predict_extents((buf.base, unseen)) == [(buf.base, coeff * unseen)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_template_never_overpredicts(seed):
+    """Strict template matching ⇒ zero false positives on any workload drawn
+    from the T1/T2 family (the paper's 0.00% F+ column)."""
+    import random
+
+    rnd = random.Random(seed)
+    space = AddressSpace(4096)
+    bufs = [space.malloc(rnd.randrange(1, 64) << 12) for _ in range(4)]
+    store = TraceStore()
+    cmds = []
+    for i in range(6):
+        n = rnd.randrange(1, 5)
+        b = bufs[rnd.randrange(len(bufs))]
+        size = min(n * 4096, b.size)
+        cmd = kernel("k", (b.base, n, i), 5.0, [(b.base, size)])
+        store.record(cmd, space=space)
+        cmds.append(cmd)
+    desc = analyze_traces(store)
+    stats = evaluate_accuracy(TemplatePredictor(desc), cmds, space)
+    assert stats.wrong_pages == 0  # F+ == 0 by construction

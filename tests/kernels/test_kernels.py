@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU; the kernels themselves target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.streammm.kernel import stream_matmul, stream_matmul_int8
+from repro.kernels.streammm.ref import stream_matmul_int8_ref, stream_matmul_ref
+
+
+def _close(a, b, rtol=5e-2, atol=5e-2):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=rtol, atol=atol
+    )
+
+
+# -- streammm ---------------------------------------------------------------
+
+MM_SHAPES = [(64, 64, 64), (128, 256, 192), (256, 128, 128), (64, 512, 64)]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_stream_matmul(m, k, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (k, n), jnp.float32).astype(dtype)
+    out = stream_matmul(
+        x, w, block_m=64, block_n=64, block_k=64, out_dtype=dtype, interpret=True
+    )
+    _close(out, stream_matmul_ref(x, w, out_dtype=dtype))
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 256, 128)])
+def test_stream_matmul_int8(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    bk = 64
+    x = jax.random.normal(k1, (m, k), jnp.float32).astype(jnp.bfloat16)
+    wq = jax.random.randint(k2, (k, n), -127, 127, jnp.int8)
+    scales = jax.random.uniform(k1, (k // bk, n), jnp.float32, 0.005, 0.02)
+    out = stream_matmul_int8(
+        x, wq, scales, block_m=64, block_n=64, block_k=bk, interpret=True
+    )
+    _close(out, stream_matmul_int8_ref(x, wq, scales, bk))
+
+
+# -- flash attention ----------------------------------------------------------
+
+FA_CASES = [
+    # (B, Sq, Skv, H, Hkv, D, causal, window)
+    (1, 128, 128, 4, 4, 32, True, 0),
+    (2, 256, 256, 8, 2, 64, True, 0),
+    (2, 128, 128, 4, 1, 32, True, 64),  # MQA + sliding window
+    (1, 128, 128, 4, 4, 32, False, 0),  # bidirectional (hubert)
+]
+
+
+@pytest.mark.parametrize("b,sq,skv,h,hkv,d,causal,window", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention(b, sq, skv, h, hkv, d, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32).astype(dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=64, block_kv=64,
+        interpret=True,
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    _close(out, ref)
+
+
+# -- paged attention ----------------------------------------------------------
+
+PA_CASES = [
+    # (B, H, Hkv, D, page_tokens, max_pages)
+    (2, 4, 2, 32, 16, 4),
+    (3, 8, 1, 64, 32, 3),
+    (1, 4, 4, 32, 16, 8),
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,d,pt,mp", PA_CASES)
+def test_paged_attention(b, h, hkv, d, pt, mp):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    n_pool = b * mp + 2
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(jnp.bfloat16)
+    pool_k = jax.random.normal(ks[1], (n_pool, pt, hkv, d), jnp.float32).astype(
+        jnp.bfloat16
+    )
+    pool_v = jax.random.normal(ks[2], (n_pool, pt, hkv, d), jnp.float32).astype(
+        jnp.bfloat16
+    )
+    # each sequence gets mp distinct pages; lengths somewhere mid-page
+    table = jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
+    lengths = jnp.asarray(
+        [1 + (i * 7) % (pt * mp - 1) for i in range(b)], jnp.int32
+    )
+    out = paged_attention(q, pool_k, pool_v, table, lengths, interpret=True)
+    ref = paged_attention_ref(q, pool_k, pool_v, table, lengths)
+    _close(out, ref)
+
+
+def test_paged_attention_growing_length():
+    """Decode realism: growing length touches exactly one more page at the
+    boundary — the T2-predictable working-set growth (paper §5.1)."""
+    b, h, hkv, d, pt, mp = 1, 4, 2, 32, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(jnp.bfloat16)
+    pool_k = jax.random.normal(ks[1], (mp, pt, hkv, d), jnp.float32).astype(jnp.bfloat16)
+    pool_v = jax.random.normal(ks[2], (mp, pt, hkv, d), jnp.float32).astype(jnp.bfloat16)
+    table = jnp.arange(mp, dtype=jnp.int32)[None]
+    for ln in (1, pt, pt + 1, 2 * pt, mp * pt):
+        out = paged_attention(
+            q, pool_k, pool_v, table, jnp.asarray([ln], jnp.int32), interpret=True
+        )
+        ref = paged_attention_ref(
+            q, pool_k, pool_v, table, jnp.asarray([ln], jnp.int32)
+        )
+        _close(out, ref)

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and absence of NaNs. Decode round-trips where
+the arch supports it (prefill → decode consistency is covered separately in
+test_cache_consistency.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config
+from repro.configs.base import ShapeSpec
+from repro.launch.specs import make_concrete_batch
+from repro.launch.steps import make_serve_step, make_train_state, make_train_step
+from repro.models.model import build_model
+
+SMOKE_TRAIN = ShapeSpec("smoke_train", seq_len=64, global_batch=2, kind="train")
+SMOKE_PREFILL = ShapeSpec("smoke_prefill", seq_len=64, global_batch=2, kind="prefill")
+SMOKE_DECODE = ShapeSpec("smoke_decode", seq_len=64, global_batch=2, kind="decode")
+
+
+def _finite(tree):
+    return all(
+        bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+    )
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = get_config(arch).reduced()
+    fns = build_model(cfg)
+    params = fns.init(rng)
+    batch = make_concrete_batch(cfg, SMOKE_TRAIN)
+    loss, aux = jax.jit(fns.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss {loss}"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_one_train_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    state = make_train_state(cfg, rng)
+    step = jax.jit(make_train_step(cfg, total_steps=100))
+    batch = make_concrete_batch(cfg, SMOKE_TRAIN)
+    new_state, metrics = step(state, batch)
+    assert int(new_state["step"]) == 1
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: loss={metrics['loss']}"
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    assert _finite(new_state["params"]), f"{arch}: NaN in updated params"
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in sorted(ARCHS) if ARCHS[a].has_decode]
+)
+def test_prefill_then_decode(arch, rng):
+    cfg = get_config(arch).reduced()
+    fns = build_model(cfg)
+    params = fns.init(rng)
+    batch = make_concrete_batch(cfg, SMOKE_PREFILL)
+    logits, cache = jax.jit(fns.prefill)(params, batch)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    serve = jax.jit(make_serve_step(cfg))
+    dec_batch = {"tokens": jnp.ones((2, 1), jnp.int32)}
+    logits2, cache2 = serve(params, cache, dec_batch)
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    assert int(cache2["index"]) == int(cache["index"]) + 1
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    """The full (non-reduced) config fields match the assignment sheet."""
+    cfg = get_config(arch)
+    expected = {
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    }[arch]
+    got = (
+        cfg.num_layers,
+        cfg.d_model,
+        cfg.num_heads,
+        cfg.num_kv_heads,
+        cfg.moe.d_ff if cfg.moe is not None else cfg.d_ff,
+        cfg.vocab_size,
+    )
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch == "grok-1-314b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (8, 2)
+    if arch == "arctic-480b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (128, 2)
+        assert cfg.moe.dense_residual
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.state_dim == 128
+    if arch == "hubert-xlarge":
+        assert not cfg.has_decode and not cfg.causal
+
+
+def test_param_counts_in_band():
+    """Analytic param counts land near the advertised sizes."""
+    bands = {
+        "grok-1-314b": (250e9, 380e9),
+        "arctic-480b": (400e9, 560e9),
+        "qwen1.5-110b": (90e9, 130e9),
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "mamba2-1.3b": (0.9e9, 1.8e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9},{hi/1e9}]B"
