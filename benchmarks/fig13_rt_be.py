@@ -21,11 +21,6 @@ def _setup(be_kind):
     return [rt, be]
 
 
-def _p99(xs):
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(0.99 * len(xs)))] if xs else 0.0
-
-
 def run():
     rows = []
     for be_kind in ("infer", "train"):
@@ -45,8 +40,8 @@ def run():
 
         ms, us1 = timed(one, "msched")
         um, us2 = timed(one, "um")  # XSched: priority compute sched + UM paging
-        p99_ms = _p99(ms.per_task[0].latencies_us) / 1e3
-        p99_um = _p99(um.per_task[0].latencies_us) / 1e3
+        p99_ms = ms.p99_latency_us(0) / 1e3
+        p99_um = um.p99_latency_us(0) / 1e3
         be_ms = ms.per_task[1].completions / (ms.sim_us * 1e-6)
         be_um = um.per_task[1].completions / (um.sim_us * 1e-6)
         rows.append(

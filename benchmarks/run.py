@@ -20,6 +20,7 @@ MODULES = [
     "fig11_overhead",
     "fig12_suv",
     "fig13_rt_be",
+    "sim_throughput",
     "kernels_bench",
     "roofline_report",
 ]

@@ -1,0 +1,130 @@
+"""Simulator-throughput benchmark: incremental planning engine vs legacy.
+
+Measures simulated-µs per wall-clock-second on the paper's combo-D
+oversubscription scenario (multiple Llama3-8B-class decode instances over one
+fixed HBM) with the msched backend — the configuration whose per-switch plan
+rebuild made the *simulator* the bottleneck. Runs the preserved pre-refactor
+path (``planning="legacy"``: per-switch future rebuilds, set-based plans,
+per-command extent re-decode) and the incremental engine on the identical
+scenario, checks the SimResults agree, and writes ``BENCH_sim_throughput.json``
+for the perf trajectory. Target: >= 5x.
+
+Usage: PYTHONPATH=src python -m benchmarks.sim_throughput [--legacy-only]
+       [--scale 2.0] [--sim-us 2000000] [--out path.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.core.hardware import RTX5080
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import combo
+
+from benchmarks.common import MSCHED_Q, PAGE
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_sim_throughput.json"
+TARGET_SPEEDUP = 5.0
+
+
+def _result_fingerprint(res) -> dict:
+    return {
+        "sim_us": res.sim_us,
+        "switches": res.switches,
+        "faults": res.faults,
+        "migrated_bytes": res.migrated_bytes,
+        "control_us": res.control_us,
+        "completions": res.total_completions(),
+    }
+
+
+def _one(planning: str, scale: float, sim_us: float) -> dict:
+    progs = combo("D", page_size=PAGE["D"], scale=scale)
+    foot = sum(p.footprint_bytes() for p in progs)
+    t0 = time.perf_counter()
+    res = simulate(
+        progs,
+        RTX5080,
+        "msched",
+        sim_us=sim_us,
+        policy=RoundRobinPolicy(MSCHED_Q),
+        planning=planning,
+    )
+    wall_s = time.perf_counter() - t0
+    return {
+        "planning": planning,
+        "tasks": len(progs),
+        "footprint_bytes": foot,
+        "oversubscription": foot / RTX5080.hbm_bytes,
+        "wall_s": wall_s,
+        "sim_us": res.sim_us,
+        "sim_us_per_wall_s": res.sim_us / wall_s if wall_s else 0.0,
+        "result": _result_fingerprint(res),
+    }
+
+
+def run_bench(
+    scale: float = 2.0,
+    sim_us: float = 2_000_000.0,
+    out_path: Path = DEFAULT_OUT,
+    legacy_only: bool = False,
+    incremental_only: bool = False,
+) -> dict:
+    report: dict = {
+        "benchmark": "sim_throughput",
+        "scenario": "combo-D msched oversubscription",
+        "scale": scale,
+        "target_speedup": TARGET_SPEEDUP,
+    }
+    if not incremental_only:
+        report["legacy"] = _one("legacy", scale, sim_us)
+    if not legacy_only:
+        report["incremental"] = _one("incremental", scale, sim_us)
+    if "legacy" in report and "incremental" in report:
+        report["speedup"] = (
+            report["incremental"]["sim_us_per_wall_s"]
+            / max(report["legacy"]["sim_us_per_wall_s"], 1e-12)
+        )
+        report["meets_target"] = report["speedup"] >= TARGET_SPEEDUP
+        report["results_identical"] = (
+            report["incremental"]["result"] == report["legacy"]["result"]
+        )
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    return report
+
+
+def run():
+    """benchmarks.run entry point: name,us,derived rows."""
+    report = run_bench()
+    inc = report["incremental"]
+    leg = report["legacy"]
+    derived = (
+        f"sim_us_per_wall_s={inc['sim_us_per_wall_s']:.0f};"
+        f"legacy={leg['sim_us_per_wall_s']:.0f};"
+        f"speedup={report['speedup']:.2f}x;"
+        f"identical={report['results_identical']}"
+    )
+    return [("sim_throughput", inc["wall_s"] * 1e6, derived)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--legacy-only", action="store_true")
+    ap.add_argument("--incremental-only", action="store_true")
+    ap.add_argument("--scale", type=float, default=2.0)
+    ap.add_argument("--sim-us", type=float, default=2_000_000.0)
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    report = run_bench(
+        args.scale, args.sim_us, args.out, args.legacy_only, args.incremental_only
+    )
+    print(json.dumps(report, indent=2))
+    if report.get("speedup") is not None and not report["meets_target"]:
+        raise SystemExit(f"speedup {report['speedup']:.2f}x below target")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,20 @@ The paper's contribution as a composable library — see DESIGN.md.
 from repro.core.hardware import PLATFORMS, RTX3080, RTX5080, TPU_V5E  # noqa: F401
 from repro.core.hbm import HBMPool  # noqa: F401
 from repro.core.memory_manager import Coordinator, TaskHelper  # noqa: F401
-from repro.core.opt import belady_reference, build_plan  # noqa: F401
+from repro.core.opt import (  # noqa: F401
+    PlannedAccess,
+    belady_reference,
+    belady_reference_scan,
+    build_plan,
+)
+from repro.core.pages import (  # noqa: F401
+    AddressSpace,
+    RunSet,
+    expand_runs,
+    merge_runs,
+    pages_to_runs,
+)
+from repro.core.planner import RunPlan, plan_switch  # noqa: F401
 from repro.core.predictor import (  # noqa: F401
     AllocationPredictor,
     OraclePredictor,

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.pages import Extent
+from repro.core.pages import Extent, PageRun, expand_runs
 
 KERNEL = "kernel"
 MEMCPY_H2D = "memcpy_h2d"
@@ -30,9 +30,24 @@ class Command:
     seq_no: int = -1
     # attached by the online predictor (per-process helper):
     predicted_extents: Optional[List[Extent]] = None
+    # page-order caches: decoded once (at annotate time / first simulated
+    # execution), so the planning hot path never re-walks extents.
+    # ``predicted_page_runs`` is (re)set by Predictor.annotate().
+    predicted_page_runs: Optional[Tuple[PageRun, ...]] = None
+    _true_page_runs: Optional[Tuple[PageRun, ...]] = None
 
     def data_bytes(self) -> int:
         return sum(sz for _, sz in self.true_extents)
+
+    def true_page_runs(self, space) -> Tuple[PageRun, ...]:
+        """Ground-truth touched pages as first-access-ordered runs (cached)."""
+        if self._true_page_runs is None:
+            self._true_page_runs = space.page_runs_of_extents(self.true_extents)
+        return self._true_page_runs
+
+    def true_page_list(self, space) -> List[int]:
+        """Ground-truth pages in first-access order."""
+        return expand_runs(self.true_page_runs(space))
 
 
 def kernel(name: str, args: Sequence[int], latency_us: float, extents: List[Extent]) -> Command:

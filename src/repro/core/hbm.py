@@ -14,7 +14,9 @@ Page keys are global integers (task address spaces are disjoint).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Iterable, List, Set, Tuple
+from typing import Iterable, List, Sequence, Set, Tuple
+
+from repro.core.pages import PageRun
 
 
 class HBMPool:
@@ -55,6 +57,19 @@ class HBMPool:
                 n += 1
         return n
 
+    def madvise_runs(self, runs: Iterable[PageRun]) -> int:
+        """``madvise`` over half-open page runs: visits pages in ascending
+        order without materializing a set, so GiB-scale groups stream through.
+        ``runs`` must be sorted and disjoint (see ``pages.merge_runs``)."""
+        n = 0
+        lst = self._list
+        for start, stop in runs:
+            for p in range(start, stop):
+                if p in lst:
+                    lst.move_to_end(p)
+                    n += 1
+        return n
+
     def evict_head(self) -> int:
         page, _ = self._list.popitem(last=False)
         self.evictions += 1
@@ -72,7 +87,7 @@ class HBMPool:
         self.populations += 1
         return victims
 
-    def migrate(self, pages: List[int]) -> Tuple[List[int], List[int]]:
+    def migrate(self, pages: Iterable[int]) -> Tuple[List[int], List[int]]:
         """Proactively populate ``pages`` (in order), evicting from the head.
 
         Returns (populated, evicted) — only pages that actually moved.
@@ -83,13 +98,25 @@ class HBMPool:
             if p in self._list:
                 self._list.move_to_end(p)
                 continue
-            evicted.extend(
-                [self.evict_head() for _ in range(max(0, len(self._list) + 1 - self.capacity))]
-            )
-            self._list[p] = None
-            self.populations += 1
+            evicted.extend(self.populate(p))
             populated.append(p)
         return populated, evicted
+
+    def migrate_runs(
+        self, runs: Iterable[PageRun]
+    ) -> Tuple[List[int], List[int]]:
+        """``migrate`` over half-open page runs (first-access order)."""
+        return self.migrate(p for start, stop in runs for p in range(start, stop))
+
+    def all_resident_runs(self, runs: Iterable[PageRun]) -> bool:
+        lst = self._list
+        return all(p in lst for start, stop in runs for p in range(start, stop))
+
+    def missing_pages(self, pages: Sequence[int]) -> List[int]:
+        """Non-resident subset of ``pages``, in order (one call per command
+        instead of one residency call per page on the simulator hot path)."""
+        lst = self._list
+        return [p for p in pages if p not in lst]
 
     def drop(self, pages: Iterable[int]) -> None:
         """Remove pages without counting an eviction (task exit/free)."""

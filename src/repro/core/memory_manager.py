@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from bisect import bisect_left
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -22,6 +23,7 @@ from repro.core.hbm import HBMPool
 from repro.core.migration import MigrationResult, plan_population
 from repro.core.opt import OptPlan, PlannedAccess, build_plan
 from repro.core.pages import AddressSpace
+from repro.core.planner import compute_cuts, first_access_runs, run_groups
 from repro.core.predictor import Predictor
 from repro.core.timeline import TaskTimeline
 
@@ -40,7 +42,16 @@ class SwitchReport:
 
 
 class TaskHelper:
-    """Per-process predictor + local future command queue."""
+    """Per-process predictor + local future command queue.
+
+    The ``PlannedAccess`` future is maintained *incrementally*: ``launch()``
+    appends one entry (with the annotate-time page-run cache attached) and
+    ``pop()`` advances the head, so a context switch never rebuilds the plan
+    from the command queue. A cumulative-latency prefix array rides along so
+    the planner can bisect a timeslice's command range in O(log queue).
+    ``future_rebuild()`` preserves the original from-scratch derivation as the
+    equivalence reference (and the ``--legacy`` benchmark path).
+    """
 
     def __init__(
         self,
@@ -54,15 +65,46 @@ class TaskHelper:
         self.predictor = predictor
         self.latency_fn = latency_fn  # kernel name -> profiled latency (us)
         self.queue: Deque[Command] = deque()
+        # incremental future state; _future/_prefix share the head offset.
+        # _prefix[k] is the cumulative latency of the first k entries of
+        # _future (len == len(_future) + 1); compaction slices both without
+        # renormalizing, so prefix *differences* are stable across pops.
+        self._future: List[PlannedAccess] = []
+        self._prefix: List[float] = [0.0]
+        self._head = 0
+        self._launched = 0
 
     def launch(self, cmd: Command) -> None:
         """Intercept an async command launch: predict + enqueue."""
         cmd.task_id = self.task_id
-        self.predictor.annotate(cmd)
+        self.predictor.annotate(cmd, self.space)
+        lat = cmd.latency_us
+        if self.latency_fn is not None:
+            lat = self.latency_fn(cmd.name) or lat
+        self._future.append(
+            PlannedAccess(
+                self.task_id, self._launched, None, lat,
+                runs=cmd.predicted_page_runs or (),
+            )
+        )
+        self._prefix.append(self._prefix[-1] + lat)
+        self._launched += 1
         self.queue.append(cmd)
 
     def future(self, max_commands: Optional[int] = None) -> List[PlannedAccess]:
+        """Current future as a list (no page decoding — entries are live)."""
+        end = len(self._future)
+        if max_commands is not None:
+            end = min(end, self._head + max_commands)
+        return self._future[self._head : end]
+
+    def future_rebuild(
+        self, max_commands: Optional[int] = None
+    ) -> List[PlannedAccess]:
+        """From-scratch future derivation (the pre-incremental hot path):
+        re-decodes every queued command's predicted extents per call."""
         out: List[PlannedAccess] = []
+        base = self._launched - len(self.queue)
         for i, cmd in enumerate(self.queue):
             if max_commands is not None and i >= max_commands:
                 break
@@ -70,14 +112,33 @@ class TaskHelper:
             lat = cmd.latency_us
             if self.latency_fn is not None:
                 lat = self.latency_fn(cmd.name) or lat
-            out.append(PlannedAccess(self.task_id, i, pages, lat))
+            out.append(PlannedAccess(self.task_id, base + i, pages, lat))
         return out
 
     def pop(self) -> Command:
-        return self.queue.popleft()
+        cmd = self.queue.popleft()  # raises cleanly on empty, state untouched
+        self._head += 1
+        if self._head >= 1024 and self._head * 2 >= len(self._future):
+            del self._future[: self._head]
+            del self._prefix[: self._head]
+            self._head = 0
+        return cmd
 
     def __len__(self):
         return len(self.queue)
+
+    # -- incremental planner hooks ------------------------------------------
+    def head_index(self) -> int:
+        return self._head
+
+    def future_slice(self, start: int, end: int) -> List[PlannedAccess]:
+        return self._future[start:end]
+
+    def consume_cut(self, start: int, budget_us: float) -> int:
+        """Index one past the last command a ``budget_us`` timeslice consumes
+        starting at ``start`` (build_plan's rule: consume while budget > 0)."""
+        target = self._prefix[start] + budget_us
+        return min(bisect_left(self._prefix, target, lo=start), len(self._future))
 
 
 def _page_order(space: AddressSpace, extents) -> List[int]:
@@ -93,7 +154,13 @@ def _page_order(space: AddressSpace, extents) -> List[int]:
 
 
 class Coordinator:
-    """Centralized daemon enforcing scheduling-aligned OPT placement."""
+    """Centralized daemon enforcing scheduling-aligned OPT placement.
+
+    The default engine plans each switch incrementally from the helpers' live
+    futures (see ``repro.core.planner``); ``legacy=True`` selects the original
+    rebuild-everything path, preserved for the sim-throughput benchmark and
+    equivalence tests.
+    """
 
     def __init__(
         self,
@@ -101,11 +168,13 @@ class Coordinator:
         pool: HBMPool,
         pipelined: bool = True,
         page_size: int = 0,
+        legacy: bool = False,
     ):
         self.platform = platform
         self.pool = pool
         self.pipelined = pipelined
         self.page_size = page_size or platform.page_size
+        self.legacy = legacy
         self.helpers: Dict[int, TaskHelper] = {}
         # cumulative stats
         self.total_madvise_us = 0.0
@@ -119,14 +188,48 @@ class Coordinator:
     def on_context_switch(
         self, next_task: int, timeline: TaskTimeline
     ) -> SwitchReport:
+        if self.legacy:
+            return self._on_context_switch_legacy(next_task, timeline)
         wall0 = time.perf_counter()
-        futures = {tid: h.future() for tid, h in self.helpers.items()}
-        plan = build_plan(timeline, futures)
+        cuts = compute_cuts(timeline, self.helpers)
+        first_runs = first_access_runs(self.helpers, cuts)
 
         # fast path: no memory pressure — everything needed is resident and
         # HBM is not full, so neither eviction reordering nor migration can
         # change anything (this is what keeps MSched's overhead at 0.59%
         # under 100% subscription, paper §7.1)
+        if self.pool.free_pages() > 0 and self.pool.all_resident_runs(first_runs):
+            return SwitchReport(
+                madvise_us=0.0,
+                migration=plan_population(
+                    self.platform, [], 0, self.pipelined, self.page_size
+                ),
+                populated_pages=0,
+                evicted_pages=0,
+                wall_clock_coordinator_s=time.perf_counter() - wall0,
+            )
+
+        # --- enforce OPT: walk the timeline in REVERSE, madvise to tail ----
+        groups = run_groups(self.helpers, cuts)
+        madvise_us = 0.0
+        for group in reversed(groups):
+            if not group:
+                continue
+            moved = self.pool.madvise_runs(group)
+            madvise_us += MADVISE_CALL_US + MADVISE_PER_PAGE_US * moved
+        # --- migrate: populate next task's immediate working set -----------
+        populated, evicted = self.pool.migrate_runs(first_runs)
+        return self._finish_switch(wall0, madvise_us, populated, evicted)
+
+    def _on_context_switch_legacy(
+        self, next_task: int, timeline: TaskTimeline
+    ) -> SwitchReport:
+        """Pre-incremental engine: rebuild every helper's future and the full
+        set-based plan on every switch (O(queue depth x footprint))."""
+        wall0 = time.perf_counter()
+        futures = {tid: h.future_rebuild() for tid, h in self.helpers.items()}
+        plan = build_plan(timeline, futures)
+
         if self.pool.free_pages() > 0 and all(
             self.pool.resident(p) for p in plan.first_access_order
         ):
@@ -140,15 +243,22 @@ class Coordinator:
                 wall_clock_coordinator_s=time.perf_counter() - wall0,
             )
 
-        # --- enforce OPT: walk the timeline in REVERSE, madvise to tail ----
         madvise_us = 0.0
         for group in reversed(plan.timeslice_page_groups):
             if not group:
                 continue
             moved = self.pool.madvise(sorted(group))
             madvise_us += MADVISE_CALL_US + MADVISE_PER_PAGE_US * moved
-        # --- migrate: populate next task's immediate working set -----------
         populated, evicted = self.pool.migrate(plan.first_access_order)
+        return self._finish_switch(wall0, madvise_us, populated, evicted)
+
+    def _finish_switch(
+        self,
+        wall0: float,
+        madvise_us: float,
+        populated: List[int],
+        evicted: List[int],
+    ) -> SwitchReport:
         migration = plan_population(
             self.platform, populated, len(evicted), self.pipelined, self.page_size
         )

@@ -13,22 +13,40 @@ in which pages will be touched. Two artifacts come out of it:
 
 ``belady_reference`` is an explicit OPT cache simulator used by tests and the
 *Ideal* baseline to prove the list mechanism achieves the optimal migration
-volume.
+volume. It evicts via a lazy max-heap on next-use (O(log R) per miss);
+``belady_reference_scan`` preserves the original O(R)-per-miss victim scan as
+the equivalence reference.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.core.pages import PageRun, expand_runs, pages_to_runs
 from repro.core.timeline import TaskTimeline
 
 
 @dataclasses.dataclass
 class PlannedAccess:
     task_id: int
-    seq_no: int  # command sequence number within the task
-    pages: List[int]  # page first-touch order within the command
+    seq_no: int  # command sequence number within the task (absolute launch index)
+    pages: Optional[List[int]]  # page first-touch order; None when runs-backed
     latency_us: float
+    # run-length form of the same first-touch order; the incremental planner
+    # fills this from the command's annotate-time cache and leaves ``pages``
+    # unmaterialized.
+    runs: Optional[Tuple[PageRun, ...]] = None
+
+    def page_runs(self) -> Tuple[PageRun, ...]:
+        if self.runs is None:
+            self.runs = pages_to_runs(self.pages or [])
+        return self.runs
+
+    def page_list(self) -> List[int]:
+        if self.pages is None:
+            self.pages = expand_runs(self.runs or ())
+        return self.pages
 
 
 @dataclasses.dataclass
@@ -57,10 +75,11 @@ def build_plan(
         cur = cursors.get(entry.task_id, 0)
         while cur < len(future) and budget > 0:
             acc = future[cur]
-            group.update(acc.pages)
-            global_seq.append(list(acc.pages))
+            pages = acc.page_list()
+            group.update(pages)
+            global_seq.append(list(pages))
             if i == 0:
-                for p in acc.pages:
+                for p in pages:
                     if p not in first_seen:
                         first_seen.add(p)
                         first_order.append(p)
@@ -93,7 +112,60 @@ def belady_reference(
     """Exact Belady OPT cache simulation over a page-access sequence.
 
     Returns (misses, evictions) — the minimum achievable migration volume.
+
+    Victim selection uses a lazy max-heap keyed on next-use index, making a
+    miss O(log R) instead of the O(R) residency scan of
+    :func:`belady_reference_scan`. Finite next-use indices are unique (each
+    access position names one page), and never-referenced pages are mutually
+    interchangeable, so the (misses, evictions) counts are identical to the
+    scan for any tie-breaking choice.
     """
+    flat: List[int] = []
+    for group in accesses:
+        flat.extend(group)
+    n = len(flat)
+    inf = n + 1
+    # next occurrence of flat[i]'s page strictly after position i
+    nxt = [inf] * n
+    last: Dict[int, int] = {}
+    for i in range(n - 1, -1, -1):
+        nxt[i] = last.get(flat[i], inf)
+        last[flat[i]] = i
+
+    resident: Set[int] = set(initially_resident or ())
+    next_of: Dict[int, int] = {}  # current next-use per resident page
+    heap: List[Tuple[int, int]] = []  # (-next_use, page), lazily invalidated
+    for q in resident:
+        next_of[q] = last.get(q, inf)  # ``last`` now holds first occurrences
+        heapq.heappush(heap, (-next_of[q], q))
+
+    misses = evictions = 0
+    for i, p in enumerate(flat):
+        if p in resident:
+            next_of[p] = nxt[i]
+            heapq.heappush(heap, (-nxt[i], p))
+            continue
+        misses += 1
+        if len(resident) >= capacity:
+            while True:
+                negd, q = heapq.heappop(heap)
+                if q in resident and next_of[q] == -negd:
+                    break
+            resident.remove(q)
+            evictions += 1
+        resident.add(p)
+        next_of[p] = nxt[i]
+        heapq.heappush(heap, (-nxt[i], p))
+    return misses, evictions
+
+
+def belady_reference_scan(
+    accesses: Sequence[Sequence[int]],
+    capacity: int,
+    initially_resident: Optional[Set[int]] = None,
+) -> Tuple[int, int]:
+    """Original O(n·R) Belady OPT simulation (linear victim scan). Kept as
+    the straightforward reference that :func:`belady_reference` must match."""
     flat: List[int] = []
     for group in accesses:
         flat.extend(group)

@@ -11,7 +11,7 @@ negatives, catastrophic false positives (up to 99.7% for LLMs, Table 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Set
+from typing import Dict, Iterable, List, Optional, Set
 
 from repro.core.commands import Command, KERNEL
 from repro.core.pages import AddressSpace, Extent, merge_extents
@@ -25,22 +25,38 @@ class Predictor:
     def predict_pages(self, cmd: Command, space: AddressSpace) -> Set[int]:
         return space.pages_of(self.predict_extents(cmd))
 
-    def annotate(self, cmd: Command) -> Command:
+    def annotate(self, cmd: Command, space: Optional[AddressSpace] = None) -> Command:
+        """Attach predicted extents; with ``space``, also decode the page
+        order once and cache it on the command (run-length form). Any
+        re-annotation replaces both, so the cache can never go stale."""
         cmd.predicted_extents = self.predict_extents(cmd)
+        cmd.predicted_page_runs = (
+            space.page_runs_of_extents(cmd.predicted_extents)
+            if space is not None
+            else None
+        )
         return cmd
 
 
 class TemplatePredictor(Predictor):
     def __init__(self, descriptors: Dict[str, KernelDescriptor]):
         self.descriptors = descriptors
+        # launches repeat the same (kernel, args) shapes across iterations;
+        # the formulas are pure, so their output is memoizable
+        self._memo: Dict[tuple, List[Extent]] = {}
 
     def predict_extents(self, cmd: Command) -> List[Extent]:
         if cmd.kind != KERNEL:
             return list(cmd.true_extents)  # memcpy: explicit API semantics
-        desc = self.descriptors.get(cmd.name)
-        if desc is None:
-            return []
-        return merge_extents(desc.predict_extents(cmd.args))
+        key = (cmd.name, cmd.args)
+        ext = self._memo.get(key)
+        if ext is None:
+            desc = self.descriptors.get(cmd.name)
+            ext = [] if desc is None else merge_extents(desc.predict_extents(cmd.args))
+            if len(self._memo) >= 65536:
+                self._memo.clear()
+            self._memo[key] = ext
+        return ext
 
 
 class AllocationPredictor(Predictor):

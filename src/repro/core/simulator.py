@@ -90,12 +90,14 @@ class MSchedBackend(Backend):
         pipelined: bool = True,
         control_free: bool = False,
         page_size: int = 0,
+        legacy_planning: bool = False,
     ):
         self.platform = platform
         self.pool = pool
         self.page_size = page_size or platform.page_size
         self.coordinator = Coordinator(
-            platform, pool, pipelined=pipelined, page_size=page_size
+            platform, pool, pipelined=pipelined, page_size=page_size,
+            legacy=legacy_planning,
         )
         for h in helpers.values():
             self.coordinator.register(h)
@@ -114,7 +116,7 @@ class MSchedBackend(Backend):
 
     def on_command(self, cmd, pages, now):
         # mispredictions fall back to standard demand paging (§5.2)
-        missing = [p for p in pages if not self.pool.resident(p)]
+        missing = self.pool.missing_pages(pages)
         if not missing:
             return 0.0
         return self.fallback.access(missing)
@@ -181,7 +183,7 @@ class SUVBackend(Backend):
         return 0.0, ready
 
     def on_command(self, cmd, pages, now):
-        missing = [p for p in pages if not self.pool.resident(p)]
+        missing = self.pool.missing_pages(pages)
         return self.pager.access(missing) if missing else 0.0
 
     def faults(self):
@@ -218,6 +220,27 @@ class SimResult:
 
     def throughput_per_s(self) -> float:
         return self.total_completions() / (self.sim_us * 1e-6) if self.sim_us else 0.0
+
+    def latency_percentile_us(
+        self, pct: float, task_id: Optional[int] = None
+    ) -> float:
+        """Request-latency percentile over one task's (or all tasks')
+        recorded arrival-to-completion latencies."""
+        if task_id is not None:
+            xs = sorted(self.per_task[task_id].latencies_us)
+        else:
+            xs = sorted(
+                x for t in self.per_task.values() for x in t.latencies_us
+            )
+        if not xs:
+            return 0.0
+        return xs[min(len(xs) - 1, int(pct / 100.0 * len(xs)))]
+
+    def p50_latency_us(self, task_id: Optional[int] = None) -> float:
+        return self.latency_percentile_us(50.0, task_id)
+
+    def p99_latency_us(self, task_id: Optional[int] = None) -> float:
+        return self.latency_percentile_us(99.0, task_id)
 
 
 class _RunTask:
@@ -307,6 +330,7 @@ def make_backend(
     predictor_kind: str = "template",
     pipelined: bool = True,
     page_size: int = 0,
+    planning: str = "incremental",
 ) -> Tuple[Backend, Dict[int, TaskHelper]]:
     helpers: Dict[int, TaskHelper] = {}
     if name == "um":
@@ -330,7 +354,10 @@ def make_backend(
     for p in programs:
         helpers[p.task_id] = TaskHelper(p.task_id, p.space, predictors[p.task_id])
     cls = IdealBackend if name == "ideal" else MSchedBackend
-    backend = cls(platform, pool, helpers, pipelined=pipelined, page_size=page_size)
+    backend = cls(
+        platform, pool, helpers, pipelined=pipelined, page_size=page_size,
+        legacy_planning=(planning == "legacy"),
+    )
     return backend, helpers
 
 
@@ -346,13 +373,16 @@ def simulate(
     arrivals: Optional[Dict[int, List[float]]] = None,
     priorities: Optional[Dict[int, int]] = None,
     prepopulate: bool = True,
+    planning: str = "incremental",
 ) -> SimResult:
     page_size = programs[0].space.page_size
     cap_bytes = capacity_bytes or platform.hbm_bytes
     pool = HBMPool(max(1, cap_bytes // page_size))
     backend, helpers = make_backend(
-        backend_name, platform, pool, programs, predictor_kind, pipelined, page_size
+        backend_name, platform, pool, programs, predictor_kind, pipelined,
+        page_size, planning,
     )
+    cached_decode = planning != "legacy"
     policy = policy or RoundRobinPolicy()
 
     quantum = getattr(policy, "quantum_us", 5_000.0)
@@ -408,12 +438,19 @@ def simulate(
         slice_start = t
         while budget > 0 and rt.runnable(t):
             cmd = rt.peek()
-            pages = _true_page_order(rt.prog.space, cmd)
+            # cached run-length decode; the legacy path re-walks the extents
+            # per executed command (preserved for the sim-throughput baseline)
+            if cached_decode:
+                pages = cmd.true_page_list(rt.prog.space)
+            else:
+                pages = _true_page_order(rt.prog.space, cmd)
             start = t
-            for p in pages:
-                r = ready.get(p)
-                if r is not None and r > start:
-                    start = r
+            if ready:
+                ready_get = ready.get
+                for p in pages:
+                    r = ready_get(p)
+                    if r is not None and r > start:
+                        start = r
             stall = backend.on_command(cmd, pages, start)
             end = start + stall + cmd.latency_us
             rt.stats.commands += 1

@@ -26,7 +26,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
-from repro.core.commands import Command, kernel
+from repro.core.commands import KERNEL, Command, kernel
 from repro.core.pages import AddressSpace, Buffer, Extent
 
 # device compute model (RTX-5080-class), used only for latency synthesis
@@ -410,69 +410,79 @@ class LLMDecodeTask(TaskProgram):
             self.space.malloc(self.kv_token_bytes * max_context, f"kv{l}")
             for l in range(c.num_layers)
         ]
-
-    def seq_len(self, it: int) -> int:
-        return min(self.start_len + it, self.max_context)
-
-    def iteration(self, it):
-        c = self.cfg
-        s = self.seq_len(it)
-        cmds: List[Command] = []
+        # precompute per-layer static command templates (args tuples, extents
+        # lists, latencies); only the attention command varies with seq_len.
+        # Extents lists are shared across iterations — commands never mutate
+        # them, and the run-decode memo keys on their content.
         act = (self.apool.base, 8 << 20)
-        layer_base = self.wpool.base
+        self._act = act
+        qkvo_sz = self.wq + 2 * self.wkv + self.wo
+        self._layers = []
         for li in range(c.num_layers):
-            base = layer_base + li * self.layer_bytes
-            qkv_ext = [
-                (base, self.wq + 2 * self.wkv + self.wo),
-                act,
-            ]
-            cmds.append(
-                kernel(
-                    "llm_qkvo",
-                    (act[0], base, self.wq + 2 * self.wkv + self.wo, c.d_model, li),
-                    _mem_us(self.wq + 2 * self.wkv + self.wo),
-                    qkv_ext,
-                )
-            )
-            kv_bytes = s * self.kv_token_bytes
-            cmds.append(
-                kernel(
-                    "llm_attn",
-                    (self.kv[li].base, act[0], s, self.kv_token_bytes, li),
-                    _mem_us(kv_bytes),
-                    [(self.kv[li].base, kv_bytes), act],
-                )
-            )
-            ffn_base = base + self.wq + 2 * self.wkv + self.wo
+            base = self.wpool.base + li * self.layer_bytes
+            ffn_base = base + qkvo_sz
             # int8 dequant scales: one scale block per quant group — a
             # strided read over the ffn weights (T3, llama.cpp-style)
             n_blocks = 64
             blk_stride = (3 * self.wffn) // n_blocks
             scale_sz = 4 << 10
-            cmds.append(
-                kernel(
-                    "llm_dequant_scales",
-                    (ffn_base, n_blocks, scale_sz, blk_stride),
-                    _mem_us(n_blocks * scale_sz),
-                    [(ffn_base + i * blk_stride, scale_sz) for i in range(n_blocks)],
-                )
-            )
-            cmds.append(
-                kernel(
-                    "llm_ffn",
-                    (act[0], ffn_base, 3 * self.wffn, c.d_ff, li),
-                    _mem_us(3 * self.wffn),
-                    [(ffn_base, 3 * self.wffn), act],
+            self._layers.append(
+                (
+                    # llm_qkvo
+                    (
+                        (act[0], base, qkvo_sz, c.d_model, li),
+                        _mem_us(qkvo_sz),
+                        [(base, qkvo_sz), act],
+                    ),
+                    # llm_attn statics
+                    self.kv[li].base,
+                    # llm_dequant_scales
+                    (
+                        (ffn_base, n_blocks, scale_sz, blk_stride),
+                        _mem_us(n_blocks * scale_sz),
+                        [(ffn_base + i * blk_stride, scale_sz) for i in range(n_blocks)],
+                    ),
+                    # llm_ffn
+                    (
+                        (act[0], ffn_base, 3 * self.wffn, c.d_ff, li),
+                        _mem_us(3 * self.wffn),
+                        [(ffn_base, 3 * self.wffn), act],
+                    ),
                 )
             )
         head_base = self.wpool.base + c.num_layers * self.layer_bytes
-        cmds.append(
-            kernel(
-                "llm_head",
-                (act[0], head_base, 2 * self.embed_bytes, c.vocab_size),
-                _mem_us(2 * self.embed_bytes),
-                [(head_base, 2 * self.embed_bytes), act],
+        self._head = (
+            (act[0], head_base, 2 * self.embed_bytes, c.vocab_size),
+            _mem_us(2 * self.embed_bytes),
+            [(head_base, 2 * self.embed_bytes), act],
+        )
+
+    def seq_len(self, it: int) -> int:
+        return min(self.start_len + it, self.max_context)
+
+    def iteration(self, it):
+        s = self.seq_len(it)
+        act = self._act
+        kv_bytes = s * self.kv_token_bytes
+        attn_lat = _mem_us(kv_bytes)
+        cmds: List[Command] = []
+        for li, (qkvo, kv_base, scales, ffn) in enumerate(self._layers):
+            cmds.append(Command(KERNEL, "llm_qkvo", qkvo[0], qkvo[1], qkvo[2]))
+            cmds.append(
+                Command(
+                    KERNEL,
+                    "llm_attn",
+                    (kv_base, act[0], s, self.kv_token_bytes, li),
+                    attn_lat,
+                    [(kv_base, kv_bytes), act],
+                )
             )
+            cmds.append(
+                Command(KERNEL, "llm_dequant_scales", scales[0], scales[1], scales[2])
+            )
+            cmds.append(Command(KERNEL, "llm_ffn", ffn[0], ffn[1], ffn[2]))
+        cmds.append(
+            Command(KERNEL, "llm_head", self._head[0], self._head[1], self._head[2])
         )
         return cmds
 

@@ -102,6 +102,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
             t_compile = time.time() - t0
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         hc = analyze_hlo(hlo)
         rec.update(

@@ -1,0 +1,345 @@
+"""Equivalence tests for the incremental planning engine.
+
+The refactored hot path (run-length page bookkeeping, incrementally
+maintained futures, heap-based Belady, bisect-based buffer lookup) must be
+*behaviorally invisible*: every plan, eviction count, and simulation result
+must match the straightforward reference implementations it replaced.
+"""
+import random
+
+import pytest
+
+from repro.core.hardware import RTX5080
+from repro.core.hbm import HBMPool
+from repro.core.memory_manager import TaskHelper, _page_order
+from repro.core.opt import (
+    PlannedAccess,
+    belady_reference,
+    belady_reference_scan,
+    build_plan,
+)
+from repro.core.pages import (
+    AddressSpace,
+    RunSet,
+    expand_runs,
+    merge_runs,
+    pages_to_runs,
+    run_page_count,
+)
+from repro.core.planner import plan_switch
+from repro.core.predictor import OraclePredictor
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.timeline import TaskTimeline, TimelineEntry
+from repro.core.workloads import MatMulTask, VecAddTask, combo
+from repro.core.commands import kernel
+
+
+# --------------------------------------------------------------------------
+# run-length primitives
+# --------------------------------------------------------------------------
+
+
+def test_page_runs_match_per_page_decode():
+    space = AddressSpace(page_size=4096)
+    bufs = [space.malloc(64 << 10) for _ in range(4)]
+    rnd = random.Random(7)
+    for _ in range(50):
+        extents = []
+        for _ in range(rnd.randrange(1, 8)):
+            b = bufs[rnd.randrange(len(bufs))]
+            off = rnd.randrange(0, b.size - 1)
+            extents.append((b.base + off, rnd.randrange(1, b.size - off)))
+        runs = space.page_runs_of_extents(extents)
+        assert expand_runs(runs) == _page_order(space, extents)
+        assert run_page_count(runs) == len(_page_order(space, extents))
+
+
+def test_runset_first_touch_order():
+    seen = RunSet()
+    out = []
+    ref_seen, ref_out = set(), []
+    rnd = random.Random(3)
+    for _ in range(200):
+        s = rnd.randrange(0, 100)
+        e = s + rnd.randrange(1, 20)
+        out.extend(expand_runs(seen.add(s, e)))
+        for p in range(s, e):
+            if p not in ref_seen:
+                ref_seen.add(p)
+                ref_out.append(p)
+    assert out == ref_out
+    assert sorted(ref_seen) == expand_runs(seen.runs())
+
+
+def test_merge_and_pages_roundtrip():
+    rnd = random.Random(11)
+    runs = [(s, s + rnd.randrange(1, 9)) for s in rnd.sample(range(200), 30)]
+    merged = merge_runs(runs)
+    assert expand_runs(merged) == sorted({p for s, e in runs for p in range(s, e)})
+    pages = [5, 6, 7, 3, 10, 11, 2]
+    assert expand_runs(pages_to_runs(pages)) == pages
+
+
+def test_free_with_shared_base_zero_size_alloc():
+    """malloc(0) shares its base with the next allocation; free() must remove
+    exactly the requested buffer from the sorted index."""
+    space = AddressSpace(page_size=4096)
+    zero = space.malloc(0)
+    real = space.malloc(8192)
+    assert zero.base == real.base
+    assert space.find_buffer(real.base) is real
+    space.free(real)
+    assert space.find_buffer(real.base + 1) is None
+    space.free(zero)
+    assert space.find_buffer(zero.base) is None
+
+
+def test_find_buffer_bisect():
+    space = AddressSpace(page_size=4096)
+    bufs = [space.malloc((i + 1) << 12) for i in range(16)]
+    for b in bufs:
+        assert space.find_buffer(b.base) is b
+        assert space.find_buffer(b.end - 1) is b
+    # gaps between page-aligned allocations and out-of-range pointers
+    assert space.find_buffer(bufs[0].base - 1) is None
+    assert space.find_buffer(bufs[-1].end + (1 << 20)) is None
+    freed = bufs[5]
+    space.free(freed)
+    assert space.find_buffer(freed.base) is None
+    assert space.find_buffer(bufs[6].base) is bufs[6]
+
+
+# --------------------------------------------------------------------------
+# incremental future == from-scratch rebuild
+# --------------------------------------------------------------------------
+
+
+def _mk_helper(task_id=0, page_size=4096):
+    space = AddressSpace(page_size=page_size, base=(task_id + 1) << 30)
+    return TaskHelper(task_id, space, OraclePredictor()), space
+
+
+def _rand_cmd(space, bufs, rnd, i):
+    extents = []
+    for _ in range(rnd.randrange(1, 5)):
+        b = bufs[rnd.randrange(len(bufs))]
+        off = rnd.randrange(0, b.size // 2)
+        extents.append((b.base + off, rnd.randrange(1, b.size - off)))
+    return kernel(f"k{i % 7}", (extents[0][0], i), float(rnd.randrange(1, 50)), extents)
+
+
+def test_incremental_future_matches_rebuild():
+    helper, space = _mk_helper()
+    bufs = [space.malloc(128 << 10) for _ in range(6)]
+    rnd = random.Random(42)
+    for i in range(60):
+        helper.launch(_rand_cmd(space, bufs, rnd, i))
+        if rnd.random() < 0.4 and len(helper):
+            helper.pop()
+    for _ in range(900):  # drive past the compaction threshold
+        helper.launch(_rand_cmd(space, bufs, rnd, 0))
+        helper.pop()
+
+    inc = helper.future()
+    ref = helper.future_rebuild()
+    assert [(a.task_id, a.seq_no, a.page_list(), a.latency_us) for a in inc] == [
+        (a.task_id, a.seq_no, a.pages, a.latency_us) for a in ref
+    ]
+    # max_commands slicing agrees too
+    inc5 = helper.future(max_commands=5)
+    ref5 = helper.future_rebuild(max_commands=5)
+    assert [a.page_list() for a in inc5] == [a.pages for a in ref5]
+
+
+def test_pop_on_empty_queue_leaves_state_intact():
+    helper, space = _mk_helper()
+    bufs = [space.malloc(64 << 10)]
+    rnd = random.Random(1)
+    with pytest.raises(IndexError):
+        helper.pop()
+    helper.launch(_rand_cmd(space, bufs, rnd, 0))
+    # planner state must still line up after the failed pop
+    assert helper.head_index() == 0
+    assert helper.consume_cut(0, 1e9) == 1
+    assert len(helper.future()) == 1
+
+
+def test_plan_tolerates_unregistered_task():
+    helper, space = _mk_helper(0)
+    bufs = [space.malloc(64 << 10)]
+    rnd = random.Random(2)
+    for i in range(4):
+        helper.launch(_rand_cmd(space, bufs, rnd, i))
+    helpers = {0: helper}
+    tl = TaskTimeline([TimelineEntry(7, 100.0), TimelineEntry(0, 100.0)])
+    plan = plan_switch(tl, helpers)
+    ref = build_plan(tl, {0: helper.future_rebuild()})
+    opt = plan.to_opt_plan(helpers)  # must not raise on task 7
+    assert opt.timeslice_page_groups == ref.timeslice_page_groups
+    assert opt.first_access_order == ref.first_access_order == []
+
+
+def test_incremental_plan_matches_build_plan():
+    rnd = random.Random(99)
+    helpers = {}
+    for tid in range(3):
+        helper, space = _mk_helper(tid)
+        bufs = [space.malloc(96 << 10) for _ in range(5)]
+        for i in range(rnd.randrange(10, 30)):
+            helper.launch(_rand_cmd(space, bufs, rnd, i))
+        for _ in range(rnd.randrange(0, 8)):
+            helper.pop()
+        helpers[tid] = helper
+
+    # integer-valued latencies make budget arithmetic exact, so the bisect
+    # cut and the sequential budget walk provably agree
+    tl = TaskTimeline(
+        [TimelineEntry(tid % 3, float(rnd.randrange(20, 200))) for tid in range(6)]
+    )
+    ref = build_plan(tl, {tid: h.future_rebuild() for tid, h in helpers.items()})
+    inc = plan_switch(tl, helpers).to_opt_plan(helpers)
+
+    assert inc.timeslice_page_groups == ref.timeslice_page_groups
+    assert inc.first_access_order == ref.first_access_order
+    assert inc.global_sequence == ref.global_sequence
+
+
+def test_planned_access_runs_and_pages_views_agree():
+    acc = PlannedAccess(0, 0, [4, 5, 6, 2, 9], 1.0)
+    assert expand_runs(acc.page_runs()) == [4, 5, 6, 2, 9]
+    acc2 = PlannedAccess(0, 0, None, 1.0, runs=((4, 7), (2, 3)))
+    assert acc2.page_list() == [4, 5, 6, 2]
+
+
+# --------------------------------------------------------------------------
+# heap Belady == scan Belady
+# --------------------------------------------------------------------------
+
+
+def test_belady_heap_matches_scan_randomized():
+    rnd = random.Random(1234)
+    for trial in range(60):
+        n_pages = rnd.randrange(3, 40)
+        capacity = rnd.randrange(2, 16)
+        accesses = [
+            [rnd.randrange(n_pages) for _ in range(rnd.randrange(1, 4))]
+            for _ in range(rnd.randrange(5, 80))
+        ]
+        init = (
+            set(rnd.sample(range(n_pages), min(n_pages, capacity)))
+            if trial % 3 == 0
+            else None
+        )
+        assert belady_reference(accesses, capacity, init) == belady_reference_scan(
+            accesses, capacity, init
+        ), (trial, capacity, accesses, init)
+
+
+# --------------------------------------------------------------------------
+# HBM pool: simplified migrate + run-based ops
+# --------------------------------------------------------------------------
+
+
+def test_migrate_eviction_counting():
+    pool = HBMPool(4)
+    for p in (1, 2, 3, 4):
+        pool.populate(p)
+    populated, evicted = pool.migrate([10, 11, 3])
+    assert populated == [10, 11]
+    assert evicted == [1, 2]
+    assert pool.evictions == 2 and pool.populations == 6
+    # resident page 3 was protected (moved to tail), not re-populated
+    assert pool.eviction_order() == [4, 10, 11, 3]
+    # migrating only-resident pages moves them without counters changing
+    populated, evicted = pool.migrate([4])
+    assert populated == [] and evicted == []
+    assert pool.evictions == 2 and pool.populations == 6
+
+
+def test_run_ops_match_page_ops():
+    a, b = HBMPool(16), HBMPool(16)
+    rnd = random.Random(5)
+    for p in rnd.sample(range(64), 16):
+        a.populate(p)
+        b.populate(p)
+    group = sorted(rnd.sample(range(64), 20))
+    runs = merge_runs(pages_to_runs(group))
+    assert a.madvise(group) == b.madvise_runs(runs)
+    assert a.eviction_order() == b.eviction_order()
+    want = [7, 8, 9, 40, 41]
+    assert a.migrate(want) == b.migrate_runs(pages_to_runs(want))
+    assert a.eviction_order() == b.eviction_order()
+    assert b.all_resident_runs(pages_to_runs(want))
+    assert not b.all_resident_runs([(60, 64)])
+
+
+# --------------------------------------------------------------------------
+# end-to-end: incremental engine produces the identical SimResult
+# --------------------------------------------------------------------------
+
+
+def _run(planning, backend="msched", predictor="oracle"):
+    progs = [
+        VecAddTask(0, n_bytes=2 << 20, kernels_per_iter=3, page_size=64 << 10),
+        MatMulTask(1, dim=512, n_matrices=6, page_size=64 << 10),
+    ]
+    foot = sum(p.footprint_bytes() for p in progs)
+    return simulate(
+        progs,
+        RTX5080,
+        backend,
+        capacity_bytes=int(foot / 1.6),
+        sim_us=120_000.0,
+        policy=RoundRobinPolicy(5_000.0),
+        predictor_kind=predictor,
+        planning=planning,
+    )
+
+
+def test_simulation_identical_between_engines():
+    for backend in ("msched", "ideal"):
+        for predictor in ("oracle", "template"):
+            new = _run("incremental", backend, predictor)
+            old = _run("legacy", backend, predictor)
+            assert new.sim_us == old.sim_us, (backend, predictor)
+            assert new.faults == old.faults
+            assert new.migrated_bytes == old.migrated_bytes
+            assert new.switches == old.switches
+            assert new.control_us == old.control_us
+            for tid in new.per_task:
+                a, b = new.per_task[tid], old.per_task[tid]
+                assert (a.completions, a.commands, a.busy_us) == (
+                    b.completions,
+                    b.commands,
+                    b.busy_us,
+                )
+
+
+def test_combo_smoke_with_incremental_engine():
+    """A small combo-D-shaped scenario survives the full msched flow."""
+    progs = combo("A", page_size=256 << 10, scale=0.05)
+    foot = sum(p.footprint_bytes() for p in progs)
+    res = simulate(
+        progs,
+        RTX5080,
+        "msched",
+        capacity_bytes=int(foot / 1.5),
+        sim_us=100_000.0,
+        policy=RoundRobinPolicy(10_000.0),
+        predictor_kind="oracle",
+    )
+    assert res.total_completions() > 0
+    assert res.switches > 0
+
+
+def test_simresult_percentile_helpers():
+    from repro.core.simulator import SimResult, TaskStats
+
+    stats = TaskStats(latencies_us=[float(x) for x in range(100, 0, -1)])
+    res = SimResult(1.0, {0: stats, 1: TaskStats()}, 0, 0, 0, 0.0)
+    xs = sorted(stats.latencies_us)
+    assert res.p50_latency_us(0) == xs[50]
+    assert res.p99_latency_us(0) == xs[99]
+    assert res.p99_latency_us(1) == 0.0
+    assert res.p99_latency_us() == xs[99]  # aggregate over tasks

@@ -1,6 +1,13 @@
 """Unit + property tests for the template analyzer (paper §5.2)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import random
+
+import pytest
+
+try:  # optional dev dependency (requirements-dev.txt)
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    st = None
 
 from repro.core.commands import kernel
 from repro.core.pages import AddressSpace
@@ -103,14 +110,7 @@ def test_indirect_access_is_opaque():
     assert T1_FIXED in kinds and OPAQUE in kinds
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    coeff=st.integers(min_value=1, max_value=64),
-    vals=st.lists(
-        st.integers(min_value=1, max_value=4096), min_size=3, max_size=6, unique=True
-    ),
-)
-def test_property_linear_recovery(coeff, vals):
+def _check_linear_recovery(coeff, vals):
     """Any exact size = coeff * arg relationship is recovered and extrapolates."""
     space = AddressSpace(4096)
     buf = space.malloc(coeff * 4096 * 2 + (1 << 20))
@@ -127,13 +127,32 @@ def test_property_linear_recovery(coeff, vals):
         assert f.predict_extents((buf.base, unseen)) == [(buf.base, coeff * unseen)]
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(min_value=0, max_value=10_000))
+if st is not None:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        coeff=st.integers(min_value=1, max_value=64),
+        vals=st.lists(
+            st.integers(min_value=1, max_value=4096), min_size=3, max_size=6, unique=True
+        ),
+    )
+    def test_property_linear_recovery(coeff, vals):
+        _check_linear_recovery(coeff, vals)
+
+else:  # deterministic fallback when hypothesis is unavailable
+
+    @pytest.mark.parametrize("seed", range(40))
+    def test_property_linear_recovery(seed):
+        rnd = random.Random(2000 + seed)
+        coeff = rnd.randint(1, 64)
+        vals = rnd.sample(range(1, 4097), rnd.randint(3, 6))
+        _check_linear_recovery(coeff, vals)
+
+
+@pytest.mark.parametrize("seed", range(20))
 def test_property_template_never_overpredicts(seed):
     """Strict template matching ⇒ zero false positives on any workload drawn
     from the T1/T2 family (the paper's 0.00% F+ column)."""
-    import random
-
     rnd = random.Random(seed)
     space = AddressSpace(4096)
     bufs = [space.malloc(rnd.randrange(1, 64) << 12) for _ in range(4)]
