@@ -21,6 +21,7 @@ MODULES = [
     "fig12_suv",
     "fig13_rt_be",
     "sim_throughput",
+    "serve_oversub",
     "kernels_bench",
     "roofline_report",
 ]

@@ -27,6 +27,13 @@ from repro.core.predictor import (  # noqa: F401
 )
 from repro.core.profiler import profile_programs  # noqa: F401
 from repro.core.scheduler import PriorityPolicy, RoundRobinPolicy  # noqa: F401
-from repro.core.simulator import simulate  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    AdmissionController,
+    RequestRecord,
+    SimResult,
+    SimState,
+    TaskArrival,
+    simulate,
+)
 from repro.core.templates import analyze_traces, template_mix_table  # noqa: F401
 from repro.core.timeline import TaskTimeline, TimelineEntry  # noqa: F401

@@ -14,7 +14,7 @@ Page keys are global integers (task address spaces are disjoint).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Iterable, List, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
 
 from repro.core.pages import PageRun
 
@@ -25,9 +25,13 @@ class HBMPool:
         self.capacity = capacity_pages
         # insertion order == eviction order; first item = next eviction victim
         self._list: "OrderedDict[int, None]" = OrderedDict()
+        # task_id -> page span, registered so free_task() can find a retired
+        # task's resident pages without scanning the whole list
+        self._task_spans: Dict[int, PageRun] = {}
         # counters
         self.evictions = 0
         self.populations = 0
+        self.freed_pages = 0
 
     # -- queries -------------------------------------------------------------
     def resident(self, page: int) -> bool:
@@ -35,6 +39,11 @@ class HBMPool:
 
     def resident_count(self) -> int:
         return len(self._list)
+
+    @property
+    def used(self) -> int:
+        """Resident page count (alias of :meth:`resident_count`)."""
+        return self.resident_count()
 
     def free_pages(self) -> int:
         return self.capacity - len(self._list)
@@ -122,3 +131,27 @@ class HBMPool:
         """Remove pages without counting an eviction (task exit/free)."""
         for p in pages:
             self._list.pop(p, None)
+
+    # -- task lifecycle ------------------------------------------------------
+    def register_task(self, task_id: int, span: PageRun) -> None:
+        """Declare the page span a task's address space occupies, so its
+        residual pages can be reclaimed when the task retires."""
+        self._task_spans[task_id] = span
+
+    def free_task(self, task_id: int) -> int:
+        """Reclaim a retired task's resident pages (process exit: the driver
+        frees the whole address space). Freed pages don't count as evictions.
+        Returns the number of pages actually reclaimed."""
+        span = self._task_spans.pop(task_id, None)
+        if span is None:
+            return 0
+        lst = self._list
+        lo, hi = span
+        if hi - lo <= len(lst):
+            freed = [p for p in range(lo, hi) if p in lst]
+        else:
+            freed = [p for p in lst if lo <= p < hi]
+        for p in freed:
+            del lst[p]
+        self.freed_pages += len(freed)
+        return len(freed)

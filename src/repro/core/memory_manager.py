@@ -185,6 +185,11 @@ class Coordinator:
     def register(self, helper: TaskHelper) -> None:
         self.helpers[helper.task_id] = helper
 
+    def unregister(self, task_id: int) -> None:
+        """Task exit: drop the helper (its future, prefix array, and queue)
+        so retired tasks stop contributing to switch plans."""
+        self.helpers.pop(task_id, None)
+
     def on_context_switch(
         self, next_task: int, timeline: TaskTimeline
     ) -> SwitchReport:

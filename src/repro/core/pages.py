@@ -39,6 +39,7 @@ class AddressSpace:
 
     def __init__(self, page_size: int = 4096, base: int = 0x10_0000_0000):
         self.page_size = page_size
+        self._base = base
         self._next = base
         self._next_id = 0
         self.buffers: Dict[int, Buffer] = {}
@@ -58,6 +59,21 @@ class AddressSpace:
         self._next += aligned
         self._next_id += 1
         return buf
+
+    def page_span(self) -> PageRun:
+        """Half-open page interval covering every allocation ever made in
+        this space (bump allocator: the span never shrinks)."""
+        return (self._base // self.page_size, _round_up(self._next, self.page_size) // self.page_size)
+
+    def release(self) -> PageRun:
+        """Tear the space down (task exit): drop every buffer and cache and
+        return the page span the owner must reclaim from the HBM pool."""
+        span = self.page_span()
+        self.buffers.clear()
+        self._bases.clear()
+        self._by_base.clear()
+        self._run_cache.clear()
+        return span
 
     def free(self, buf: Buffer) -> None:
         if self.buffers.pop(buf.buf_id, None) is None:

@@ -18,39 +18,52 @@ from repro.core.timeline import TaskTimeline, TimelineEntry
 class SchedTask:
     task_id: int
     priority: int = 0  # higher = more urgent (RT), 0 = best-effort
-    runnable: bool = True  # has pending work
+    runnable: bool = True  # has pending work (admitted and not blocked)
 
 
 class Policy:
     def next_entry(self, tasks: Dict[int, SchedTask]) -> Optional[TimelineEntry]:
         raise NotImplementedError
 
-    def timeline(self, tasks: Dict[int, SchedTask], horizon: int) -> TaskTimeline:
+    def timeline(self, tasks: Dict[int, SchedTask], horizon: int = 0) -> TaskTimeline:
         raise NotImplementedError
 
 
 class RoundRobinPolicy(Policy):
     """Equal timeslices in fixed order — the paper's default (matches the
-    time-sharing behavior of commodity GPUs)."""
+    time-sharing behavior of commodity GPUs).
+
+    The task population is dynamic: tasks absent from ``tasks`` have departed
+    and are purged from the rotation; tasks present but ``runnable=False``
+    (blocked tasks, e.g. RT jobs waiting between request arrivals) keep their
+    rotation slot but are *skipped* by both ``next_entry`` and ``timeline`` —
+    a non-runnable task must never be scheduled nor planned for. (Requests
+    queued by admission control are *not* in ``tasks`` at all: they only
+    enter the population once admitted.)
+    """
 
     def __init__(self, quantum_us: float = 5_000.0):
         self.quantum_us = quantum_us
         self._rr: List[int] = []
 
     def _order(self, tasks: Dict[int, SchedTask]) -> List[int]:
-        ids = [t for t in sorted(tasks) if tasks[t].runnable]
-        for t in ids:
-            if t not in self._rr:
+        # purge departed tasks; enroll new ones at the tail (arrival order)
+        self._rr = [t for t in self._rr if t in tasks]
+        known = set(self._rr)
+        for t in sorted(tasks):
+            if t not in known:
                 self._rr.append(t)
-        self._rr = [t for t in self._rr if t in ids]
-        return self._rr
+        return [t for t in self._rr if tasks[t].runnable]
 
     def next_entry(self, tasks):
         order = self._order(tasks)
         if not order:
             return None
         tid = order[0]
-        self._rr = self._rr[1:] + [tid]  # rotate
+        # rotate only the dispatched task; skipped (non-runnable) tasks keep
+        # their position so they run promptly once admitted/unblocked
+        self._rr.remove(tid)
+        self._rr.append(tid)
         return TimelineEntry(tid, self.quantum_us)
 
     def timeline(self, tasks, horizon: int = 0) -> TaskTimeline:
@@ -72,24 +85,27 @@ class PriorityPolicy(Policy):
         self._rr = RoundRobinPolicy(quantum_us)
 
     def _split(self, tasks):
-        rt = {t: s for t, s in tasks.items() if s.priority > 0 and s.runnable}
-        be = {t: s for t, s in tasks.items() if s.priority == 0 and s.runnable}
+        """Partition by priority class. Both classes keep their non-runnable
+        members (so the BE rotation preserves their slots); runnable filtering
+        happens at selection time."""
+        rt = {t: s for t, s in tasks.items() if s.priority > 0}
+        be = {t: s for t, s in tasks.items() if s.priority == 0}
         return rt, be
 
     def next_entry(self, tasks):
         rt, be = self._split(tasks)
-        if rt:
-            tid = min(rt)  # deterministic among RT
+        runnable_rt = [t for t, s in rt.items() if s.runnable]
+        if runnable_rt:
+            tid = min(runnable_rt)  # deterministic among RT
             return TimelineEntry(tid, self.rt_quantum_us)
-        if be:
-            return self._rr.next_entry(be)
-        return None
+        return self._rr.next_entry(be) if be else None
 
     def timeline(self, tasks, horizon: int = 0) -> TaskTimeline:
         rt, be = self._split(tasks)
         entries: List[TimelineEntry] = []
-        for tid in sorted(rt):
+        for tid in sorted(t for t, s in rt.items() if s.runnable):
             entries.append(TimelineEntry(tid, self.rt_quantum_us))
-        be_tl = self._rr.timeline(be, horizon or 2 * max(len(be), 1))
+        n_be = sum(1 for s in be.values() if s.runnable)
+        be_tl = self._rr.timeline(be, horizon or 2 * max(n_be, 1))
         entries.extend(be_tl.entries)
         return TaskTimeline(entries)

@@ -13,12 +13,19 @@ memory backends:
 
 The engine models *early execution* (§6.3): a kernel starts as soon as its own
 pages are ready, not when the whole working-set migration finishes.
+
+The task population is *dynamic*: besides the static ``programs`` set, callers
+may supply ``task_events`` — timed :class:`TaskArrival`s whose programs are
+admitted (optionally gated by an admission controller), run to completion
+(``TaskProgram.total_iterations``), and then retire, tearing down their
+address space and returning their HBM pages. With no events configured the
+engine is bit-for-bit identical to the static simulator.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.commands import Command
 from repro.core.demand_paging import DemandPager
@@ -56,6 +63,14 @@ class Backend:
     def on_command(self, cmd: Command, pages: List[int], now: float) -> float:
         return 0.0
 
+    def admit_task(self, prog: TaskProgram) -> Optional[TaskHelper]:
+        """Dynamic task arrival: set up per-task backend state. Returns the
+        task's helper when the backend uses one (msched/ideal)."""
+        return None
+
+    def retire_task(self, task_id: int) -> None:
+        """Dynamic task departure: tear down per-task backend state."""
+
     def faults(self) -> int:
         return 0
 
@@ -91,6 +106,7 @@ class MSchedBackend(Backend):
         control_free: bool = False,
         page_size: int = 0,
         legacy_planning: bool = False,
+        predictor_factory: Optional[Callable[[TaskProgram], Predictor]] = None,
     ):
         self.platform = platform
         self.pool = pool
@@ -103,7 +119,18 @@ class MSchedBackend(Backend):
             self.coordinator.register(h)
         self.fallback = DemandPager(platform, pool, page_size)  # false negatives
         self.control_free = control_free
+        self.predictor_factory = predictor_factory
         self._migrated = 0
+
+    def admit_task(self, prog):
+        if self.predictor_factory is None:
+            raise RuntimeError("backend built without a predictor factory")
+        helper = TaskHelper(prog.task_id, prog.space, self.predictor_factory(prog))
+        self.coordinator.register(helper)
+        return helper
+
+    def retire_task(self, task_id):
+        self.coordinator.unregister(task_id)
 
     def on_switch(self, task_id, timeline, now):
         report = self.coordinator.on_context_switch(task_id, timeline)
@@ -164,11 +191,18 @@ class SUVBackend(Backend):
         self.pager = DemandPager(platform, pool, page_size)
         self._task_pages: Dict[int, List[int]] = {}
         for prog in programs:
-            pages: List[int] = []
-            for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
-                pages.extend(prog.space.pages_of_extent((b.base, b.size)))
-            self._task_pages[prog.task_id] = pages
+            self.admit_task(prog)
         self._migrated = 0
+
+    def admit_task(self, prog):
+        pages: List[int] = []
+        for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
+            pages.extend(prog.space.pages_of_extent((b.base, b.size)))
+        self._task_pages[prog.task_id] = pages
+        return None
+
+    def retire_task(self, task_id):
+        self._task_pages.pop(task_id, None)
 
     def on_switch(self, task_id, timeline, now):
         pages = self._task_pages.get(task_id, [])
@@ -194,6 +228,113 @@ class SUVBackend(Backend):
 
 
 # --------------------------------------------------------------------------
+# Dynamic task lifecycle
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TaskArrival:
+    """A timed task-arrival event: ``program`` joins the task population at
+    ``time_us`` (subject to admission control) and retires after
+    ``program.total_iterations`` completed iterations."""
+
+    time_us: float
+    program: TaskProgram
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle timestamps of one dynamically-arrived task (one request in
+    the serving regime); the raw material for SLO metrics."""
+
+    task_id: int
+    arrival_us: float
+    admitted_us: Optional[float] = None
+    first_iter_us: Optional[float] = None  # end of first completed iteration
+    finished_us: Optional[float] = None
+    iterations_done: int = 0
+    total_iterations: Optional[int] = None
+    rejected: bool = False
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def ttft_us(self) -> Optional[float]:
+        """Time-to-first-token: arrival → end of the first iteration (the
+        prefill + first decode step in the serving lifecycle)."""
+        if self.first_iter_us is None:
+            return None
+        return self.first_iter_us - self.arrival_us
+
+    def tpot_us(self) -> Optional[float]:
+        """Time-per-output-token over the decode phase (post first token)."""
+        if (
+            self.finished_us is None
+            or self.first_iter_us is None
+            or not self.total_iterations
+            or self.total_iterations < 2
+        ):
+            return None
+        return (self.finished_us - self.first_iter_us) / (self.total_iterations - 1)
+
+    def latency_us(self) -> Optional[float]:
+        if self.finished_us is None:
+            return None
+        return self.finished_us - self.arrival_us
+
+    def meets_slo(
+        self,
+        ttft_slo_us: Optional[float] = None,
+        tpot_slo_us: Optional[float] = None,
+    ) -> bool:
+        if self.finished_us is None:
+            return False
+        if ttft_slo_us is not None:
+            ttft = self.ttft_us()
+            if ttft is None or ttft > ttft_slo_us:
+                return False
+        if (
+            tpot_slo_us is not None
+            and self.total_iterations is not None
+            and self.total_iterations >= 2
+        ):
+            # single-token requests have no decode phase: TPOT is undefined
+            # and cannot be violated
+            tpot = self.tpot_us()
+            if tpot is None or tpot > tpot_slo_us:
+                return False
+        return True
+
+
+class AdmissionController:
+    """Decides what happens when a dynamic task arrives (or is re-evaluated
+    from the wait queue): ``"admit"``, ``"queue"``, or ``"reject"``.
+
+    ``state`` is the live :class:`SimState` view — pool occupancy, active
+    helpers (predicted working sets), the scheduling policy, and the clock —
+    so controllers can be MSched-aware without owning simulator internals.
+    """
+
+    def decide(
+        self, prog: TaskProgram, arrival_us: float, state: "SimState"
+    ) -> str:
+        return "admit"
+
+
+@dataclasses.dataclass
+class SimState:
+    """Read-only view handed to admission controllers."""
+
+    now: float
+    platform: Platform
+    pool: HBMPool
+    policy: "Policy"
+    page_size: int
+    active: Dict[int, TaskProgram]
+    helpers: Dict[int, TaskHelper]
+    waiting: int  # queued-but-not-admitted candidates (FIFO ahead included)
+
+
+# --------------------------------------------------------------------------
 # Engine
 # --------------------------------------------------------------------------
 
@@ -214,9 +355,53 @@ class SimResult:
     migrated_bytes: int
     switches: int
     control_us: float
+    # dynamic-lifecycle records (empty for static simulations)
+    requests: List[RequestRecord] = dataclasses.field(default_factory=list)
+    # end-of-run HBM occupancy / reclamation (leak accounting)
+    hbm_used_pages: int = 0
+    hbm_freed_pages: int = 0
 
     def total_completions(self) -> int:
         return sum(t.completions for t in self.per_task.values())
+
+    # -- serving / SLO metrics ----------------------------------------------
+    def finished_requests(self) -> List[RequestRecord]:
+        return [r for r in self.requests if r.finished_us is not None]
+
+    def request_metric_us(self, metric: str) -> List[float]:
+        """Per-request metric samples: ``ttft`` | ``tpot`` | ``latency``."""
+        fn = {
+            "ttft": RequestRecord.ttft_us,
+            "tpot": RequestRecord.tpot_us,
+            "latency": RequestRecord.latency_us,
+        }[metric]
+        return [v for r in self.requests if (v := fn(r)) is not None]
+
+    def request_percentile_us(self, metric: str, pct: float) -> float:
+        xs = sorted(self.request_metric_us(metric))
+        if not xs:
+            return 0.0
+        return xs[min(len(xs) - 1, int(pct / 100.0 * len(xs)))]
+
+    def goodput_per_s(
+        self,
+        ttft_slo_us: Optional[float] = None,
+        tpot_slo_us: Optional[float] = None,
+        window_us: Optional[float] = None,
+    ) -> float:
+        """Completed requests per second that met every given SLO.
+
+        ``window_us`` defaults to this run's makespan; cross-run comparisons
+        (e.g. UM vs MSched on the same trace) must pass a *common* window, or
+        the ratio conflates SLO attainment with drain speed.
+        """
+        window = window_us if window_us is not None else self.sim_us
+        if not window:
+            return 0.0
+        good = sum(
+            1 for r in self.requests if r.meets_slo(ttft_slo_us, tpot_slo_us)
+        )
+        return good / (window * 1e-6)
 
     def throughput_per_s(self) -> float:
         return self.total_completions() / (self.sim_us * 1e-6) if self.sim_us else 0.0
@@ -258,10 +443,27 @@ class _RunTask:
         self.iter_launched = 0
         self.cmd_in_iter = 0
         self.iter_len = 1
+        self.total_iterations: Optional[int] = getattr(
+            prog, "total_iterations", None
+        )
         self.arrivals: Optional[Deque[float]] = None  # RT mode
         self.current_arrival: Optional[float] = None
         self.stats = TaskStats()
         self._refill()
+
+    def _exhausted(self) -> bool:
+        """Finite program with every iteration already launched."""
+        return (
+            self.total_iterations is not None
+            and self.iter_launched >= self.total_iterations
+        )
+
+    def finished(self) -> bool:
+        """Finite program with every iteration completed — retire the task."""
+        return (
+            self.total_iterations is not None
+            and self.stats.completions >= self.total_iterations
+        )
 
     def _launch_iter(self):
         cmds = self.prog.iteration(self.iter_launched)
@@ -282,6 +484,8 @@ class _RunTask:
             launched_iters < MIN_LOOKAHEAD_ITERS
             or self.queued_us < self.lookahead_us
         ):
+            if self._exhausted():
+                break
             self._launch_iter()
             launched_iters += 1
             if launched_iters > 10_000:
@@ -302,7 +506,9 @@ class _RunTask:
             self.cmd_in_iter = 0
             self.stats.completions += 1
             done = True
-        if len(self.queue) < self.iter_len or self.queued_us < self.lookahead_us:
+        if not self._exhausted() and (
+            len(self.queue) < self.iter_len or self.queued_us < self.lookahead_us
+        ):
             self._launch_iter()
         return done
 
@@ -331,32 +537,34 @@ def make_backend(
     pipelined: bool = True,
     page_size: int = 0,
     planning: str = "incremental",
+    profile_set: Optional[Sequence[TaskProgram]] = None,
 ) -> Tuple[Backend, Dict[int, TaskHelper]]:
+    """``profile_set`` overrides the programs used for offline template
+    analysis — dynamic scenarios profile representative programs up front and
+    admit instances of the same kernels later."""
     helpers: Dict[int, TaskHelper] = {}
     if name == "um":
         return UMBackend(platform, pool, page_size), helpers
     if name == "suv":
         return SUVBackend(platform, pool, programs, page_size), helpers
 
-    # msched / ideal need per-task helpers with a predictor
+    # msched / ideal need per-task helpers with a predictor; the factory is
+    # kept on the backend so dynamically admitted tasks get the same kind
     if name == "ideal" or predictor_kind == "oracle":
-        predictors: Dict[int, Predictor] = {
-            p.task_id: OraclePredictor() for p in programs
-        }
+        factory: Callable[[TaskProgram], Predictor] = lambda p: OraclePredictor()
     elif predictor_kind == "allocation":
-        predictors = {p.task_id: AllocationPredictor(p.space) for p in programs}
+        factory = lambda p: AllocationPredictor(p.space)
     else:  # template: offline profile + analyze (the real MSched flow)
-        store = profile_programs(programs, iters=4)
+        store = profile_programs(list(profile_set or programs), iters=4)
         descriptors = analyze_traces(store)
-        predictors = {
-            p.task_id: TemplatePredictor(descriptors) for p in programs
-        }
+        factory = lambda p: TemplatePredictor(descriptors)
     for p in programs:
-        helpers[p.task_id] = TaskHelper(p.task_id, p.space, predictors[p.task_id])
+        helpers[p.task_id] = TaskHelper(p.task_id, p.space, factory(p))
     cls = IdealBackend if name == "ideal" else MSchedBackend
     backend = cls(
         platform, pool, helpers, pipelined=pipelined, page_size=page_size,
         legacy_planning=(planning == "legacy"),
+        predictor_factory=factory,
     )
     return backend, helpers
 
@@ -374,13 +582,31 @@ def simulate(
     priorities: Optional[Dict[int, int]] = None,
     prepopulate: bool = True,
     planning: str = "incremental",
+    task_events: Optional[Sequence[TaskArrival]] = None,
+    admission: Optional[AdmissionController] = None,
+    profile_set: Optional[Sequence[TaskProgram]] = None,
+    page_size: int = 0,
 ) -> SimResult:
-    page_size = programs[0].space.page_size
+    if not page_size:
+        if programs:
+            page_size = programs[0].space.page_size
+        elif task_events:
+            page_size = task_events[0].program.space.page_size
+        else:
+            page_size = 4096
+    all_progs = list(programs) + [ev.program for ev in task_events or ()]
+    for prog in all_progs:
+        if prog.space.page_size != page_size:
+            raise ValueError(
+                f"task {prog.task_id} uses page_size "
+                f"{prog.space.page_size}, simulation uses {page_size}; "
+                "pool residency keys would not be comparable"
+            )
     cap_bytes = capacity_bytes or platform.hbm_bytes
     pool = HBMPool(max(1, cap_bytes // page_size))
     backend, helpers = make_backend(
         backend_name, platform, pool, programs, predictor_kind, pipelined,
-        page_size, planning,
+        page_size, planning, profile_set,
     )
     cached_decode = planning != "legacy"
     policy = policy or RoundRobinPolicy()
@@ -393,6 +619,7 @@ def simulate(
             rt.arrivals = deque(arrivals[prog.task_id])
             rt.current_arrival = None
         tasks[prog.task_id] = rt
+        pool.register_task(prog.task_id, prog.space.page_span())
 
     # warm start: fill HBM fairly (tasks ran before the measuring window)
     if prepopulate:
@@ -404,10 +631,109 @@ def simulate(
             for p in pages[:share]:
                 pool.populate(p)
 
+    # -- dynamic lifecycle state --------------------------------------------
+    dynamic = bool(task_events)
+    pending: Deque[TaskArrival] = deque(
+        sorted(task_events or [], key=lambda e: e.time_us)
+    )
+    waiting: Deque[Tuple[TaskArrival, RequestRecord]] = deque()
+    records: List[RequestRecord] = []
+    rec_by_tid: Dict[int, RequestRecord] = {}
+    retired_stats: Dict[int, TaskStats] = {}
+    used_task_ids = set(tasks)  # static ids + every id ever admitted
+
+    def _sim_state(now: float) -> SimState:
+        return SimState(
+            now=now,
+            platform=platform,
+            pool=pool,
+            policy=policy,
+            page_size=page_size,
+            active={tid: r.prog for tid, r in tasks.items()},
+            helpers=helpers,
+            waiting=len(waiting),
+        )
+
+    def _admit(ev: TaskArrival, rec: RequestRecord, now: float) -> None:
+        prog = ev.program
+        if prog.task_id in used_task_ids:
+            raise ValueError(
+                f"TaskArrival task_id {prog.task_id} collides with an "
+                "existing task; ids must be unique across programs and events"
+            )
+        used_task_ids.add(prog.task_id)
+        helper = backend.admit_task(prog)
+        if helper is not None:
+            helpers[prog.task_id] = helper
+        rt = _RunTask(prog, helper, lookahead_us=2.2 * quantum)
+        tasks[prog.task_id] = rt
+        pool.register_task(prog.task_id, prog.space.page_span())
+        rec.admitted_us = now
+        if rt.finished():
+            # degenerate zero-iteration program: it can never produce the
+            # completion event that triggers retirement, so retire it here
+            _retire(prog.task_id, now)
+
+    def _retire(tid: int, now: float) -> None:
+        rt = tasks.pop(tid)
+        backend.retire_task(tid)
+        helpers.pop(tid, None)
+        # final span (covers any post-admission allocations), then reclaim
+        span = rt.prog.release()
+        pool.register_task(tid, span)
+        pool.free_task(tid)
+        retired_stats[tid] = rt.stats
+        rec = rec_by_tid.get(tid)
+        if rec is not None:
+            rec.finished_us = now
+            rec.iterations_done = rt.stats.completions
+
+    def _drain_waiting(now: float) -> None:
+        # FIFO re-evaluation of the wait queue: stop at the first candidate
+        # the controller still holds back (no overtaking)
+        while waiting:
+            ev, rec = waiting[0]
+            verdict = (
+                admission.decide(ev.program, ev.time_us, _sim_state(now))
+                if admission is not None
+                else "admit"
+            )
+            if verdict == "admit":
+                waiting.popleft()
+                _admit(ev, rec, now)
+            elif verdict == "reject":
+                waiting.popleft()
+                rec.rejected = True
+            else:
+                break
+
+    def _process_arrivals(now: float) -> None:
+        # due arrivals join the wait queue in arrival order; one FIFO drain
+        # then decides everyone (no overtaking: the drain stops at the first
+        # candidate the controller holds back)
+        while pending and pending[0].time_us <= now:
+            ev = pending.popleft()
+            rec = RequestRecord(
+                ev.program.task_id,
+                ev.time_us,
+                total_iterations=getattr(ev.program, "total_iterations", None),
+                meta=dict(ev.meta),
+            )
+            records.append(rec)
+            rec_by_tid[ev.program.task_id] = rec
+            waiting.append((ev, rec))
+        _drain_waiting(now)
+
+    # purge degenerate zero-iteration static programs before the clock starts
+    for tid in [tid for tid, rt in tasks.items() if rt.finished()]:
+        _retire(tid, 0.0)
+
     t = 0.0
     switches = 0
     control_us = 0.0
     while t < sim_us:
+        if dynamic:
+            _process_arrivals(t)
         sched = {
             tid: SchedTask(
                 tid,
@@ -418,13 +744,21 @@ def simulate(
         }
         entry = policy.next_entry(sched)
         if entry is None:
-            # idle until next arrival
+            # idle until the next RT arrival or task-arrival event
             nxt = [rt.next_arrival() for rt in tasks.values()]
             nxt = [x for x in nxt if x is not None]
-            if not nxt:
-                break
-            t = max(t, min(nxt))
-            continue
+            if pending:
+                nxt.append(pending[0].time_us)
+            if nxt:
+                t = max(t, min(nxt))
+                continue
+            if waiting:
+                # nothing running and nothing due: force-admit the queue head
+                # (an idle device can always take work) to guarantee progress
+                ev, rec = waiting.popleft()
+                _admit(ev, rec, t)
+                continue
+            break
         # the timeline's first entry must be the task about to run —
         # next_entry() already rotated the policy's run queue past it
         timeline = TaskTimeline([entry] + policy.timeline(sched).entries)
@@ -434,9 +768,16 @@ def simulate(
         switches += 1
 
         rt = tasks[entry.task_id]
+        if not rt.queue:
+            # only reachable when iteration() returns no commands: fail loud
+            # instead of spinning the scheduler at zero simulated time
+            raise RuntimeError(
+                f"task {entry.task_id} is runnable but has no queued "
+                "commands; its iteration() produced an empty command list"
+            )
         budget = entry.timeslice_us
         slice_start = t
-        while budget > 0 and rt.runnable(t):
+        while budget > 0 and rt.runnable(t) and rt.queue:
             cmd = rt.peek()
             # cached run-length decode; the legacy path re-walks the extents
             # per executed command (preserved for the sim-throughput baseline)
@@ -462,14 +803,30 @@ def simulate(
                 rt.stats.latencies_us.append(t - rt.current_arrival)
                 rt.current_arrival = None
                 # next pending arrival (if already due) picked up by runnable()
+            if completed and dynamic:
+                rec = rec_by_tid.get(entry.task_id)
+                if rec is not None and rt.stats.completions == 1:
+                    rec.first_iter_us = t
+            if completed and rt.finished():
+                # finite programs retire regardless of how they entered —
+                # a drained static task must not pin the scheduler forever
+                _retire(entry.task_id, t)
+                if dynamic:
+                    _process_arrivals(t)  # freed pages may unblock the queue
+                break
 
+    per_task = {tid: rt.stats for tid, rt in tasks.items()}
+    per_task.update(retired_stats)
     return SimResult(
         sim_us=t,
-        per_task={tid: rt.stats for tid, rt in tasks.items()},
+        per_task=per_task,
         faults=backend.faults(),
         migrated_bytes=backend.migrated_pages() * page_size,
         switches=switches,
         control_us=control_us,
+        requests=records,
+        hbm_used_pages=pool.used,
+        hbm_freed_pages=pool.freed_pages,
     )
 
 

@@ -43,9 +43,16 @@ def _flop_us(flops: float, efficiency: float = 0.5) -> float:
 
 
 class TaskProgram:
-    """A task's repeating command stream (one iteration = one completion)."""
+    """A task's repeating command stream (one iteration = one completion).
+
+    ``total_iterations`` is ``None`` for the classic long-running combos; a
+    finite value makes the task *retire* after that many completed iterations
+    (the dynamic-lifecycle serving regime), at which point the simulator calls
+    :meth:`release` and reclaims the task's HBM pages.
+    """
 
     name: str = "task"
+    total_iterations: Optional[int] = None
 
     def __init__(self, task_id: int, page_size: int = 4096):
         self.task_id = task_id
@@ -56,6 +63,10 @@ class TaskProgram:
 
     def footprint_bytes(self) -> int:
         return sum(b.size for b in self.space.buffers.values())
+
+    def release(self):
+        """Task exit: tear down the address space; returns its page span."""
+        return self.space.release()
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,29 @@
+"""Trace-driven multi-tenant LLM serving on top of the MSched simulator.
+
+The serving subsystem turns the static multitasking simulator into an
+open-loop serving engine: request traces (Poisson / bursty / diurnal) become
+dynamic task arrivals, each request runs a prefill→decode→EOS lifecycle as a
+finite task, and an MSched-aware admission controller decides admit/queue/
+reject from the predicted working sets and the scheduler timeline.
+"""
+from repro.serving.admission import (  # noqa: F401
+    AlwaysAdmit,
+    MSchedAdmission,
+    footprint_pages,
+    predicted_working_set_pages,
+)
+from repro.serving.engine import (  # noqa: F401
+    SLOSpec,
+    ServeReport,
+    build_events,
+    serve_trace,
+)
+from repro.serving.lifecycle import ServedRequestTask  # noqa: F401
+from repro.serving.traces import (  # noqa: F401
+    GENERATORS,
+    Request,
+    Trace,
+    bursty_trace,
+    diurnal_trace,
+    poisson_trace,
+)

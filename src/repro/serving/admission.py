@@ -1,0 +1,122 @@
+"""Admission control for the dynamic serving regime.
+
+``AlwaysAdmit`` is the naive baseline: every request becomes a task the
+moment it arrives, so concurrency — and with it memory pressure — is
+unbounded (demand paging's thrashing regime).
+
+``MSchedAdmission`` is MSched-aware: it reconstructs the *per-schedule-cycle
+HBM demand* from exactly the state the memory manager already maintains —
+each admitted task's predicted working set (the helper's annotated future,
+cut to one scheduling quantum, i.e. what the planner would migrate on that
+task's next switch) — and admits a candidate only while that demand plus the
+candidate's *full footprint* (no helper exists yet, so the conservative
+bound) fits within a headroom fraction of HBM.
+Otherwise the request queues; the queue head is re-evaluated at every
+scheduler step — so capacity freed by a retirement is picked up at the next
+context switch — in FIFO order with no overtaking. A wait deadline turns
+starvation into an explicit rejection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.memory_manager import TaskHelper
+from repro.core.pages import merge_runs, run_page_count
+from repro.core.simulator import AdmissionController, SimState
+from repro.core.workloads import TaskProgram
+
+
+def predicted_working_set_pages(
+    helper: TaskHelper, quantum_us: float
+) -> int:
+    """Pages the planner predicts the task touches in one scheduling quantum
+    (the same cut ``compute_cuts`` takes at a context switch)."""
+    head = helper.head_index()
+    end = helper.consume_cut(head, quantum_us)
+    runs = [
+        run
+        for acc in helper.future_slice(head, end)
+        for run in acc.page_runs()
+    ]
+    return run_page_count(merge_runs(runs))
+
+
+def footprint_pages(prog: TaskProgram, page_size: int) -> int:
+    return sum(
+        (b.size + page_size - 1) // page_size
+        for b in prog.space.buffers.values()
+    )
+
+
+class AlwaysAdmit(AdmissionController):
+    """Naive baseline: unbounded concurrency."""
+
+    def decide(self, prog, arrival_us, state):
+        return "admit"
+
+
+class MSchedAdmission(AdmissionController):
+    """Admit while predicted per-cycle working sets fit in HBM headroom.
+
+    ``headroom`` is the fraction of HBM capacity the admitted working sets
+    may claim (< 1 reserves slack for mispredictions and the control plane;
+    > 1 deliberately oversubscribes the *working sets*, betting on MSched's
+    proactive swap). ``max_wait_us`` rejects requests queued longer than the
+    deadline (callers surface this as load shedding).
+    """
+
+    def __init__(
+        self,
+        headroom: float = 0.9,
+        max_wait_us: Optional[float] = None,
+        quantum_us: Optional[float] = None,
+    ):
+        assert headroom > 0
+        self.headroom = headroom
+        self.max_wait_us = max_wait_us
+        self.quantum_us = quantum_us
+        # diagnostics (per request, not per decide() call — queued candidates
+        # are re-evaluated on every scheduler step)
+        self.admitted = 0
+        self.queued = 0
+        self.rejected = 0
+        self._queued_ids: set = set()
+
+    def _demand_pages(self, state: SimState, quantum_us: float) -> int:
+        """Per-cycle HBM demand: every active task runs once per round-robin
+        cycle of the scheduler timeline, so the cycle demand is the sum of
+        the predicted per-quantum working sets of all admitted tasks."""
+        total = 0
+        for tid, prog in state.active.items():
+            helper = state.helpers.get(tid)
+            if helper is not None and len(helper):
+                total += predicted_working_set_pages(helper, quantum_us)
+            else:
+                # no helper (UM-style backend) or empty future: assume the
+                # whole footprint is live — the conservative bound
+                total += footprint_pages(prog, state.page_size)
+        return total
+
+    def decide(self, prog, arrival_us, state):
+        if (
+            self.max_wait_us is not None
+            and state.now - arrival_us > self.max_wait_us
+        ):
+            self.rejected += 1
+            self._queued_ids.discard(prog.task_id)
+            return "reject"
+        if not state.active:
+            self.admitted += 1
+            self._queued_ids.discard(prog.task_id)
+            return "admit"  # an idle device always takes work
+        quantum = self.quantum_us or getattr(state.policy, "quantum_us", 5_000.0)
+        demand = self._demand_pages(state, quantum)
+        candidate = footprint_pages(prog, state.page_size)
+        if demand + candidate <= self.headroom * state.pool.capacity:
+            self.admitted += 1
+            self._queued_ids.discard(prog.task_id)
+            return "admit"
+        if prog.task_id not in self._queued_ids:
+            self._queued_ids.add(prog.task_id)
+            self.queued += 1
+        return "queue"

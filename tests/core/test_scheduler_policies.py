@@ -1,0 +1,79 @@
+"""Policy behavior under a dynamic task population: non-runnable tasks must
+be skipped everywhere (next_entry AND timeline), queued tasks keep their
+rotation slot, and departed tasks are purged."""
+from repro.core.scheduler import PriorityPolicy, RoundRobinPolicy, SchedTask
+
+
+def _tasks(spec):
+    """spec: {tid: (priority, runnable)}"""
+    return {
+        tid: SchedTask(tid, priority=pr, runnable=run)
+        for tid, (pr, run) in spec.items()
+    }
+
+
+def test_rr_skips_non_runnable_everywhere():
+    pol = RoundRobinPolicy(10.0)
+    tasks = _tasks({0: (0, True), 1: (0, False), 2: (0, True)})
+    seen = [pol.next_entry(tasks).task_id for _ in range(4)]
+    assert 1 not in seen
+    assert seen == [0, 2, 0, 2]
+    tl = pol.timeline(tasks)
+    assert tl.entries and 1 not in tl.task_ids()
+
+
+def test_rr_all_blocked_yields_none_and_empty_timeline():
+    pol = RoundRobinPolicy(10.0)
+    tasks = _tasks({0: (0, False), 1: (0, False)})
+    assert pol.next_entry(tasks) is None
+    assert pol.timeline(tasks).entries == []
+
+
+def test_rr_blocked_task_keeps_rotation_slot():
+    """A queued-but-not-admitted task must not be pushed to the back of the
+    rotation while it waits: it runs immediately once runnable."""
+    pol = RoundRobinPolicy(10.0)
+    run_all = _tasks({0: (0, True), 1: (0, True), 2: (0, True)})
+    assert pol.next_entry(run_all).task_id == 0  # rotation now 1,2,0
+    blocked = _tasks({0: (0, True), 1: (0, False), 2: (0, True)})
+    assert pol.next_entry(blocked).task_id == 2  # 1 skipped, not purged
+    unblocked = _tasks({0: (0, True), 1: (0, True), 2: (0, True)})
+    assert pol.next_entry(unblocked).task_id == 1  # still ahead of 0
+
+
+def test_rr_departed_tasks_purged_new_tasks_enrolled():
+    pol = RoundRobinPolicy(10.0)
+    pol.next_entry(_tasks({0: (0, True), 1: (0, True)}))
+    # task 0 departs; task 5 arrives
+    tasks = _tasks({1: (0, True), 5: (0, True)})
+    order = [pol.next_entry(tasks).task_id for _ in range(4)]
+    assert order == [1, 5, 1, 5]
+    assert 0 not in pol.timeline(tasks).task_ids()
+
+
+def test_priority_skips_non_runnable_rt():
+    pol = PriorityPolicy(quantum_us=10.0, rt_quantum_us=5.0)
+    tasks = _tasks({0: (5, False), 1: (5, True), 2: (0, True)})
+    assert pol.next_entry(tasks).task_id == 1
+    tl = pol.timeline(tasks)
+    assert 0 not in tl.task_ids()
+    # RT fully blocked -> BE runs; blocked RT still absent from the timeline
+    tasks = _tasks({0: (5, False), 2: (0, True)})
+    assert pol.next_entry(tasks).task_id == 2
+    assert 0 not in pol.timeline(tasks).task_ids()
+
+
+def test_priority_be_rotation_survives_blocked_spell():
+    pol = PriorityPolicy(quantum_us=10.0)
+    run_all = _tasks({0: (0, True), 1: (0, True), 2: (0, True)})
+    assert pol.next_entry(run_all).task_id == 0
+    blocked = _tasks({0: (0, True), 1: (0, False), 2: (0, True)})
+    assert pol.next_entry(blocked).task_id == 2
+    assert pol.next_entry(run_all).task_id == 1  # slot preserved
+
+
+def test_priority_everything_blocked():
+    pol = PriorityPolicy()
+    tasks = _tasks({0: (5, False), 1: (0, False)})
+    assert pol.next_entry(tasks) is None
+    assert pol.timeline(tasks).entries == []

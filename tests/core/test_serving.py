@@ -1,0 +1,464 @@
+"""Serving subsystem tests: trace generators, dynamic task lifecycle,
+admission control, page reclamation, and static-result preservation."""
+import random
+
+import pytest
+
+from repro.core.hardware import RTX5080
+from repro.core.hbm import HBMPool
+from repro.core.scheduler import PriorityPolicy, RoundRobinPolicy
+from repro.core.simulator import TaskArrival, simulate
+from repro.core.workloads import (
+    LLMDecodeTask,
+    MatMulTask,
+    TaskProgram,
+    VecAddTask,
+    combo,
+)
+from repro.serving import (
+    AlwaysAdmit,
+    MSchedAdmission,
+    Request,
+    SLOSpec,
+    ServedRequestTask,
+    Trace,
+    bursty_trace,
+    diurnal_trace,
+    poisson_trace,
+    serve_trace,
+)
+
+ARCH = "qwen3-1.7b"
+
+
+# --------------------------------------------------------------------------
+# Arrival-process generators
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gen", [poisson_trace, bursty_trace, diurnal_trace])
+def test_generators_deterministic_under_seed(gen):
+    a = gen(8.0, 4.0, seed=123)
+    b = gen(8.0, 4.0, seed=123)
+    assert a.requests == b.requests
+    c = gen(8.0, 4.0, seed=124)
+    assert c.requests != a.requests
+
+
+@pytest.mark.parametrize("gen", [poisson_trace, bursty_trace, diurnal_trace])
+def test_generators_rate_sanity(gen):
+    """Realized mean rate within 25% of the configured rate (law of large
+    numbers over a long window; generators are open-loop)."""
+    tr = gen(20.0, 30.0, seed=7)
+    realized = len(tr) / 30.0
+    assert 0.75 * 20.0 <= realized <= 1.25 * 20.0, realized
+    assert all(
+        tr.requests[i].arrival_us <= tr.requests[i + 1].arrival_us
+        for i in range(len(tr.requests) - 1)
+    )
+    assert all(r.prompt_tokens >= 1 and r.output_tokens >= 1 for r in tr)
+
+
+def test_bursty_is_burstier_than_poisson():
+    """Same mean rate, higher inter-arrival CV."""
+
+    def cv(tr):
+        gaps = [
+            b.arrival_us - a.arrival_us
+            for a, b in zip(tr.requests, tr.requests[1:])
+        ]
+        mean = sum(gaps) / len(gaps)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        return var**0.5 / mean
+
+    assert cv(bursty_trace(10.0, 60.0, seed=3, cv=4.0)) > 1.5 * cv(
+        poisson_trace(10.0, 60.0, seed=3)
+    )
+
+
+def test_trace_json_roundtrip(tmp_path):
+    tr = diurnal_trace(5.0, 10.0, seed=11, amplitude=0.5)
+    path = tmp_path / "trace.json"
+    tr.save(path)
+    back = Trace.load(path)
+    assert back.requests == tr.requests
+    assert back.meta == tr.meta
+
+
+# --------------------------------------------------------------------------
+# Request lifecycle
+# --------------------------------------------------------------------------
+
+
+def test_served_request_task_lifecycle():
+    req = Request(0, ARCH, 0.0, prompt_tokens=512, output_tokens=8)
+    task = ServedRequestTask(0, req, page_size=1 << 20)
+    assert task.total_iterations == 8
+    # per-request KV: sized to the request, not the model max context
+    per_tok = task.kv_token_bytes * task.cfg.num_layers
+    assert task.kv_bytes() == per_tok * (512 + 8)
+    # prefill (iteration 0, long prompt) is costlier than a decode step
+    pre = sum(c.latency_us for c in task.iteration(0))
+    dec = sum(c.latency_us for c in task.iteration(1))
+    assert pre > dec
+    # KV free on completion, then full teardown
+    foot = task.footprint_bytes()
+    freed = task.free_kv()
+    assert freed == per_tok * (512 + 8)
+    assert task.footprint_bytes() == foot - freed
+    task.release()
+    assert task.footprint_bytes() == 0
+
+
+def test_prefill_attention_covers_prompt():
+    req = Request(0, ARCH, 0.0, prompt_tokens=64, output_tokens=4)
+    task = ServedRequestTask(0, req, page_size=1 << 20)
+    attn = [c for c in task.iteration(0) if c.name == "llm_attn"][0]
+    kv_ext = attn.true_extents[0]
+    assert kv_ext[1] == 64 * task.kv_token_bytes
+
+
+# --------------------------------------------------------------------------
+# Dynamic admission / retirement: no leaks, records complete
+# --------------------------------------------------------------------------
+
+
+class _FiniteVec(VecAddTask):
+    def __init__(self, task_id, iters, **kw):
+        super().__init__(task_id, **kw)
+        self.total_iterations = iters
+
+
+def _random_events(rnd, n):
+    evs = []
+    t = 0.0
+    for i in range(n):
+        t += rnd.expovariate(1 / 400.0)
+        evs.append(
+            TaskArrival(
+                t,
+                _FiniteVec(
+                    100 + i,
+                    iters=rnd.randrange(1, 6),
+                    n_bytes=rnd.randrange(1, 4) << 20,
+                    kernels_per_iter=rnd.randrange(1, 4),
+                    page_size=64 << 10,
+                ),
+            )
+        )
+    return evs
+
+
+@pytest.mark.parametrize("backend", ["msched", "um", "ideal", "suv"])
+def test_randomized_dynamic_no_hbm_leak(backend):
+    """Tasks arrive, run to completion, retire — every backend must return
+    the pool to its (empty) baseline once the population drains."""
+    for seed in range(4):
+        rnd = random.Random(seed)
+        evs = _random_events(rnd, rnd.randrange(3, 9))
+        admission = (
+            MSchedAdmission(headroom=0.9) if rnd.random() < 0.5 else AlwaysAdmit()
+        )
+        res = simulate(
+            [],
+            RTX5080,
+            backend,
+            capacity_bytes=rnd.randrange(4, 12) << 20,  # force evictions
+            sim_us=10_000_000.0,
+            policy=RoundRobinPolicy(2_000.0),
+            predictor_kind="oracle",
+            task_events=evs,
+            admission=admission,
+            page_size=64 << 10,
+            prepopulate=False,
+        )
+        assert len(res.requests) == len(evs)
+        for rec in res.requests:
+            assert rec.finished_us is not None, (backend, seed, rec)
+            assert rec.iterations_done == rec.total_iterations
+            assert rec.admitted_us is not None and not rec.rejected
+        # the leak assertion: hbm.used back to (zero) baseline, pages were
+        # actually reclaimed through the free path
+        assert res.hbm_used_pages == 0, (backend, seed)
+        assert res.hbm_freed_pages > 0
+
+
+def test_hbm_free_task_regression():
+    """Direct driver-level regression: task teardown reclaims exactly the
+    task's resident pages and hbm.used returns to baseline."""
+    pool = HBMPool(64)
+    for p in range(10):
+        pool.populate(p)
+    baseline = pool.used
+    pool.register_task(7, (1000, 1100))
+    for p in range(1000, 1040):
+        pool.populate(p)
+    assert pool.used == baseline + 40
+    freed = pool.free_task(7)
+    assert freed == 40
+    assert pool.used == baseline
+    assert pool.freed_pages == 40
+    assert pool.free_task(7) == 0  # idempotent
+    # frees are not evictions
+    assert pool.evictions == 0
+
+
+def test_static_finite_program_terminates_and_retires():
+    """A finite-total_iterations program passed *statically* (no task_events)
+    must retire at completion, not pin the scheduler in a zero-time spin."""
+    prog = _FiniteVec(0, iters=3, n_bytes=1 << 20, page_size=64 << 10)
+    res = simulate(
+        [prog], RTX5080, "um", capacity_bytes=64 << 20, sim_us=1_000_000.0,
+        policy=RoundRobinPolicy(2_000.0), prepopulate=False,
+    )
+    assert res.per_task[0].completions == 3
+    assert res.sim_us < 1_000_000.0  # terminated at drain, not at horizon
+    assert res.hbm_used_pages == 0  # retirement reclaimed the pages
+
+
+def test_mismatched_event_page_size_rejected():
+    ev = TaskArrival(0.0, _FiniteVec(5, iters=1, n_bytes=1 << 20, page_size=4096))
+    with pytest.raises(ValueError, match="page_size"):
+        simulate(
+            [], RTX5080, "um", sim_us=1_000.0, task_events=[ev],
+            page_size=64 << 10,
+        )
+    # static programs get the same validation against an explicit page_size
+    with pytest.raises(ValueError, match="page_size"):
+        simulate(
+            [VecAddTask(0, n_bytes=1 << 20, page_size=4096)], RTX5080, "um",
+            sim_us=1_000.0, page_size=64 << 10,
+        )
+
+
+def test_empty_iteration_program_fails_loud():
+    class _EmptyIter(TaskProgram):
+        def iteration(self, it):
+            return []
+
+    with pytest.raises(RuntimeError, match="empty command list"):
+        simulate(
+            [_EmptyIter(0, page_size=4096)], RTX5080, "um",
+            capacity_bytes=1 << 20, sim_us=10_000.0,
+            policy=RoundRobinPolicy(1_000.0), prepopulate=False,
+        )
+
+
+def test_zero_iteration_task_retires_immediately():
+    """A degenerate finite task (total_iterations=0) must not wedge the
+    engine: it retires on admission without ever being scheduled."""
+    ev = TaskArrival(0.0, _FiniteVec(5, iters=0, n_bytes=1 << 20, page_size=64 << 10))
+    work = TaskArrival(
+        10.0, _FiniteVec(6, iters=2, n_bytes=1 << 20, page_size=64 << 10)
+    )
+    res = simulate(
+        [], RTX5080, "um", capacity_bytes=64 << 20, sim_us=1_000_000.0,
+        policy=RoundRobinPolicy(2_000.0), task_events=[ev, work],
+        page_size=64 << 10, prepopulate=False,
+    )
+    recs = {r.task_id: r for r in res.requests}
+    assert recs[5].finished_us is not None and recs[5].iterations_done == 0
+    assert recs[6].iterations_done == 2
+    assert res.sim_us < 1_000_000.0
+    # static flavor of the same degenerate program
+    res = simulate(
+        [_FiniteVec(0, iters=0, n_bytes=1 << 20, page_size=64 << 10)],
+        RTX5080, "um", capacity_bytes=64 << 20, sim_us=1_000_000.0,
+        policy=RoundRobinPolicy(2_000.0), prepopulate=False,
+    )
+    assert res.sim_us == 0.0
+    # serving-side validation rejects the request outright
+    with pytest.raises(ValueError, match="token counts"):
+        ServedRequestTask(0, Request(0, ARCH, 0.0, 8, 0))
+
+
+def test_colliding_task_ids_rejected():
+    static = VecAddTask(3, n_bytes=1 << 20, page_size=64 << 10)
+    ev = TaskArrival(0.0, _FiniteVec(3, iters=1, n_bytes=1 << 20, page_size=64 << 10))
+    with pytest.raises(ValueError, match="collides"):
+        simulate(
+            [static], RTX5080, "um", capacity_bytes=64 << 20,
+            sim_us=100_000.0, policy=RoundRobinPolicy(2_000.0),
+            task_events=[ev],
+        )
+
+
+def test_address_space_release():
+    prog = _FiniteVec(3, iters=1, n_bytes=1 << 20, page_size=64 << 10)
+    span = prog.space.page_span()
+    assert span[1] > span[0]
+    released = prog.release()
+    assert released == span
+    assert prog.footprint_bytes() == 0
+    assert prog.space.find_buffer(span[0] * prog.space.page_size) is None
+
+
+# --------------------------------------------------------------------------
+# Admission control
+# --------------------------------------------------------------------------
+
+
+def _tiny_trace(n=6, rate=50.0, seed=5):
+    return poisson_trace(
+        rate, n / rate, seed=seed, tenants=(ARCH,),
+        prompt_mean=64, output_mean=6, max_prompt=128, max_output=12,
+    )
+
+
+def test_msched_admission_queues_under_pressure():
+    """With HBM sized for ~one request, the controller serializes admissions
+    instead of letting the population thrash; everyone still finishes."""
+    tr = _tiny_trace()
+    probe = ServedRequestTask(999, tr.requests[0], page_size=1 << 20)
+    one = probe.footprint_bytes()
+    ctrl = MSchedAdmission(headroom=0.9)
+    rep = serve_trace(
+        tr, RTX5080, backend="msched", capacity_bytes=int(1.2 * one),
+        admission=ctrl, policy=RoundRobinPolicy(100_000.0), page_size=1 << 20,
+    )
+    assert rep.n_finished == len(tr)
+    assert ctrl.queued > 0  # pressure actually exercised the queue path
+    assert rep.result.hbm_used_pages == 0
+
+
+def test_admission_reject_on_deadline():
+    tr = _tiny_trace(n=8, rate=100.0)
+    ctrl = MSchedAdmission(headroom=0.9, max_wait_us=1_000.0)
+    probe = ServedRequestTask(999, tr.requests[0], page_size=1 << 20)
+    rep = serve_trace(
+        tr, RTX5080, backend="msched",
+        capacity_bytes=int(1.2 * probe.footprint_bytes()),
+        admission=ctrl, policy=RoundRobinPolicy(100_000.0), page_size=1 << 20,
+    )
+    assert rep.n_rejected > 0
+    assert rep.n_finished + rep.n_rejected == rep.n_requests
+
+
+def test_request_records_slo_metrics():
+    tr = _tiny_trace()
+    rep = serve_trace(
+        tr, RTX5080, backend="msched", capacity_bytes=RTX5080.hbm_bytes,
+        admission=AlwaysAdmit(), policy=RoundRobinPolicy(100_000.0),
+        page_size=1 << 20, slo=SLOSpec(ttft_us=1e9, tpot_us=1e9),
+    )
+    assert rep.n_finished == len(tr)
+    for rec in rep.result.finished_requests():
+        assert rec.ttft_us() is not None and rec.ttft_us() > 0
+        lat = rec.latency_us()
+        assert lat is not None and lat >= rec.ttft_us()
+        if rec.total_iterations and rec.total_iterations > 1:
+            assert rec.tpot_us() is not None and rec.tpot_us() > 0
+    # infinitely lax SLOs: goodput == throughput
+    assert rep.goodput_per_s == pytest.approx(rep.throughput_per_s)
+
+
+# --------------------------------------------------------------------------
+# Static results preserved bit-for-bit
+# --------------------------------------------------------------------------
+
+
+def _fingerprint(res):
+    return (
+        res.sim_us,
+        res.switches,
+        res.faults,
+        res.migrated_bytes,
+        res.control_us,
+        res.total_completions(),
+        tuple(
+            (tid, s.completions, s.commands, s.busy_us)
+            for tid, s in sorted(res.per_task.items())
+        ),
+    )
+
+
+def test_static_combo_results_preserved_bit_for_bit():
+    """Golden fingerprints recorded on the pre-serving engine (PR 1): the
+    dynamic-lifecycle machinery must be invisible when no arrivals are
+    configured. Pure-Python float arithmetic is deterministic, so these
+    values are exact across platforms."""
+    progs = combo("A", page_size=256 << 10, scale=0.05)
+    foot = sum(p.footprint_bytes() for p in progs)
+    res = simulate(
+        progs, RTX5080, "msched", capacity_bytes=int(foot / 1.5),
+        sim_us=100_000.0, policy=RoundRobinPolicy(10_000.0),
+        predictor_kind="oracle",
+    )
+    assert _fingerprint(res)[:6] == (
+        103033.16203421363, 10, 0, 130809856, 2830.7400000000002, 5973,
+    )
+
+    rt = MatMulTask(0, dim=1024, n_matrices=4, page_size=256 << 10)
+    be = VecAddTask(1, n_bytes=64 << 20, page_size=256 << 10)
+    foot = rt.footprint_bytes() + be.footprint_bytes()
+    res = simulate(
+        [rt, be], RTX5080, "msched", capacity_bytes=int(foot / 1.5),
+        sim_us=600_000, policy=PriorityPolicy(quantum_us=50_000.0),
+        arrivals={0: [float(i * 200_000) for i in range(3)]},
+        priorities={0: 10, 1: 0},
+    )
+    assert _fingerprint(res)[:6] == (
+        606495.3071845965, 13, 7680, 15858663424, 2486.2400000000002, 13,
+    )
+
+
+def test_empty_event_list_is_static():
+    progs = [
+        VecAddTask(0, n_bytes=2 << 20, page_size=64 << 10),
+        MatMulTask(1, dim=512, n_matrices=4, page_size=64 << 10),
+    ]
+    foot = sum(p.footprint_bytes() for p in progs)
+    kw = dict(
+        capacity_bytes=int(foot / 1.5), sim_us=80_000.0,
+        predictor_kind="oracle",
+    )
+    a = simulate(progs, RTX5080, "msched", policy=RoundRobinPolicy(5_000.0), **kw)
+    progs2 = [
+        VecAddTask(0, n_bytes=2 << 20, page_size=64 << 10),
+        MatMulTask(1, dim=512, n_matrices=4, page_size=64 << 10),
+    ]
+    b = simulate(
+        progs2, RTX5080, "msched", policy=RoundRobinPolicy(5_000.0),
+        task_events=[], admission=AlwaysAdmit(), **kw
+    )
+    assert _fingerprint(a) == _fingerprint(b)
+    assert b.requests == []
+
+
+# --------------------------------------------------------------------------
+# End-to-end serving comparison (the headline): slow sweep kept out of tier-1
+# --------------------------------------------------------------------------
+
+
+def test_msched_goodput_beats_um_under_oversubscription():
+    """Fast version of benchmarks/serve_oversub.py acceptance: ≥1.5×
+    oversubscription, MSched goodput ≥ 3× UM on the same seeded trace."""
+    tr = poisson_trace(
+        4.0, 1.5, seed=7, tenants=(ARCH,), prompt_mean=128,
+        output_mean=12, max_prompt=256, max_output=24,
+    )
+    probe = ServedRequestTask(999, tr.requests[0], page_size=1 << 20)
+    cap = int(3 * probe.footprint_bytes() / 1.5)
+    slo = SLOSpec(ttft_us=2e6, tpot_us=50e3)
+    um = serve_trace(
+        tr, RTX5080, backend="um", capacity_bytes=cap,
+        admission=AlwaysAdmit(), policy=RoundRobinPolicy(2_000.0),
+        page_size=1 << 20, slo=slo,
+    )
+    ms = serve_trace(
+        tr, RTX5080, backend="msched", capacity_bytes=cap,
+        admission=MSchedAdmission(headroom=0.9),
+        policy=RoundRobinPolicy(350_000.0), page_size=1 << 20, slo=slo,
+    )
+    assert ms.goodput_per_s > 0
+    assert ms.goodput_per_s >= 3.0 * um.goodput_per_s, (
+        ms.goodput_per_s, um.goodput_per_s,
+    )
+
+
+@pytest.mark.slow
+def test_serve_oversub_benchmark_full():
+    from benchmarks.serve_oversub import run_bench
+
+    report = run_bench(out_path=None)
+    assert report["meets_target"]
