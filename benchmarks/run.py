@@ -1,9 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run`` runs
-everything; ``--only fig07`` filters by prefix.
+everything; ``--only fig07`` filters by prefix. ``--profile`` wraps each
+module's run() in cProfile and prints its top-20 cumulative-time entries to
+stderr — the supported way to find the simulator's current hot path (see
+EXPERIMENTS.md, "Profiling the simulator").
 """
 import argparse
+import cProfile
+import io
+import pstats
 import sys
 import traceback
 
@@ -26,10 +32,17 @@ MODULES = [
     "roofline_report",
 ]
 
+PROFILE_TOP_N = 20
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="module name prefix filter")
+    ap.add_argument(
+        "--profile", action="store_true",
+        help=f"cProfile each module; print top-{PROFILE_TOP_N} by cumulative "
+        "time to stderr",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -39,7 +52,17 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            for name, us, derived in mod.run():
+            if args.profile:
+                prof = cProfile.Profile()
+                rows = prof.runcall(mod.run)
+                buf = io.StringIO()
+                stats = pstats.Stats(prof, stream=buf)
+                stats.sort_stats("cumulative").print_stats(PROFILE_TOP_N)
+                print(f"==== profile: {mod_name} ====", file=sys.stderr)
+                print(buf.getvalue(), file=sys.stderr, flush=True)
+            else:
+                rows = mod.run()
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception:  # noqa: BLE001
             failures += 1

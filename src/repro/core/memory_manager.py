@@ -20,9 +20,14 @@ from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.commands import Command
 from repro.core.hardware import Platform
 from repro.core.hbm import HBMPool
-from repro.core.migration import MigrationResult, plan_population
+from repro.core.migration import (
+    MigrationResult,
+    RunMigration,
+    plan_population,
+    plan_population_runs,
+)
 from repro.core.opt import OptPlan, PlannedAccess, build_plan
-from repro.core.pages import AddressSpace
+from repro.core.pages import AddressSpace, run_page_count
 from repro.core.planner import compute_cuts, first_access_runs, run_groups
 from repro.core.predictor import Predictor
 from repro.core.timeline import TaskTimeline
@@ -35,7 +40,9 @@ MADVISE_PER_PAGE_US = 0.02
 @dataclasses.dataclass
 class SwitchReport:
     madvise_us: float
-    migration: MigrationResult
+    # RunMigration on the incremental path, MigrationResult on legacy; both
+    # expose total_us / populated_runs / ready_view(base)
+    migration: "RunMigration | MigrationResult"
     populated_pages: int
     evicted_pages: int
     wall_clock_coordinator_s: float  # real measured Python time (Fig. 11)
@@ -206,7 +213,7 @@ class Coordinator:
         if self.pool.free_pages() > 0 and self.pool.all_resident_runs(first_runs):
             return SwitchReport(
                 madvise_us=0.0,
-                migration=plan_population(
+                migration=plan_population_runs(
                     self.platform, [], 0, self.pipelined, self.page_size
                 ),
                 populated_pages=0,
@@ -223,8 +230,11 @@ class Coordinator:
             moved = self.pool.madvise_runs(group)
             madvise_us += MADVISE_CALL_US + MADVISE_PER_PAGE_US * moved
         # --- migrate: populate next task's immediate working set -----------
-        populated, evicted = self.pool.migrate_runs(first_runs)
-        return self._finish_switch(wall0, madvise_us, populated, evicted)
+        # runs go straight through the driver: no page-list materialization
+        populated_runs, evicted_runs = self.pool.migrate_runs(first_runs)
+        return self._finish_switch_runs(
+            wall0, madvise_us, populated_runs, run_page_count(evicted_runs)
+        )
 
     def _on_context_switch_legacy(
         self, next_task: int, timeline: TaskTimeline
@@ -267,16 +277,43 @@ class Coordinator:
         migration = plan_population(
             self.platform, populated, len(evicted), self.pipelined, self.page_size
         )
-        wall = time.perf_counter() - wall0
+        return self._report(
+            wall0, madvise_us, migration, len(populated), len(evicted)
+        )
 
+    def _finish_switch_runs(
+        self,
+        wall0: float,
+        madvise_us: float,
+        populated_runs,
+        evicted_pages: int,
+    ) -> SwitchReport:
+        migration = plan_population_runs(
+            self.platform, populated_runs, evicted_pages, self.pipelined,
+            self.page_size,
+        )
+        return self._report(
+            wall0, madvise_us, migration, run_page_count(populated_runs),
+            evicted_pages,
+        )
+
+    def _report(
+        self,
+        wall0: float,
+        madvise_us: float,
+        migration,
+        populated_pages: int,
+        evicted_pages: int,
+    ) -> SwitchReport:
+        wall = time.perf_counter() - wall0
         self.total_madvise_us += madvise_us
         self.total_migration_us += migration.total_us
-        self.total_populated += len(populated)
-        self.total_evicted += len(evicted)
+        self.total_populated += populated_pages
+        self.total_evicted += evicted_pages
         return SwitchReport(
             madvise_us=madvise_us,
             migration=migration,
-            populated_pages=len(populated),
-            evicted_pages=len(evicted),
+            populated_pages=populated_pages,
+            evicted_pages=evicted_pages,
             wall_clock_coordinator_s=wall,
         )

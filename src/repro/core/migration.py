@@ -14,9 +14,13 @@ as its own pages are resident rather than after the whole working set lands.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from bisect import bisect_right
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.hardware import Platform
+from repro.core.pages import PageRun, pages_to_runs, run_page_count
 
 
 @dataclasses.dataclass
@@ -25,6 +29,112 @@ class MigrationResult:
     populate_bytes: int
     total_us: float
     page_ready_us: Dict[int, float]  # page -> time (relative to start)
+
+    @property
+    def populated_runs(self) -> List[PageRun]:
+        """Populated pages (dict insertion order = first-access order) as
+        order-preserving runs."""
+        return list(pages_to_runs(list(self.page_ready_us.keys())))
+
+    def ready_view(self, base: float) -> Optional["DictReadyView"]:
+        """Run-queryable view over the per-page dict (legacy-planning path)."""
+        if not self.page_ready_us:
+            return None
+        return DictReadyView(self.page_ready_us, base)
+
+
+class DictReadyView:
+    """Ready-time view backed by the legacy per-page dict. O(pages) per
+    query — only the preserved ``planning="legacy"`` benchmark path uses it."""
+
+    def __init__(self, page_ready_us: Dict[int, float], base: float):
+        self._d = page_ready_us
+        self._base = base
+        self.global_max = base + max(page_ready_us.values())
+
+    def max_ready(self, runs: Sequence[PageRun]) -> Optional[float]:
+        best = None
+        get = self._d.get
+        for s, e in runs:
+            for p in range(s, e):
+                t = get(p)
+                if t is not None and (best is None or t > best):
+                    best = t
+        return None if best is None else self._base + best
+
+
+class IndexReadyView:
+    """Ready-time view over populated runs whose per-page ready time is
+    monotone in population order: the max over any page subset is the value
+    at the subset's largest population index, so one command costs
+    O(runs · log populated-runs) instead of O(pages)."""
+
+    def __init__(
+        self,
+        populated_runs: Sequence[PageRun],
+        value_fn: Callable[[int], float],
+        n_pages: int,
+    ):
+        order = sorted(range(len(populated_runs)), key=lambda i: populated_runs[i][0])
+        self._starts = [populated_runs[i][0] for i in order]
+        self._stops = [populated_runs[i][1] for i in order]
+        offsets = []
+        off = 0
+        for s, e in populated_runs:
+            offsets.append(off)
+            off += e - s
+        self._offsets = [offsets[i] for i in order]
+        self._value = value_fn
+        self.global_max = value_fn(n_pages - 1) if n_pages else float("-inf")
+
+    def max_ready(self, runs: Sequence[PageRun]) -> Optional[float]:
+        starts, stops, offs = self._starts, self._stops, self._offsets
+        best_idx = -1
+        for a, b in runs:
+            j = bisect_right(starts, a) - 1
+            if j < 0:
+                j = 0
+            while j < len(starts) and starts[j] < b:
+                if stops[j] > a:
+                    hi = stops[j] if stops[j] < b else b
+                    idx = offs[j] + (hi - starts[j]) - 1
+                    if idx > best_idx:
+                        best_idx = idx
+                j += 1
+        return None if best_idx < 0 else self._value(best_idx)
+
+
+@dataclasses.dataclass
+class RunMigration:
+    """Run-native migration plan: per-page ready times in population order,
+    without a per-page dict (``times[i]`` is the i-th populated page's ready
+    time relative to the switch, computed with the exact float rounding of
+    the per-page pipeline loop)."""
+
+    evict_bytes: int
+    populate_bytes: int
+    total_us: float
+    populated_runs: List[PageRun]  # first-access order
+    times: Optional[np.ndarray]  # float64, len == populated page count
+
+    @property
+    def page_ready_us(self) -> Dict[int, float]:
+        """Materialized per-page dict (tests/debug; O(pages))."""
+        out: Dict[int, float] = {}
+        i = 0
+        for s, e in self.populated_runs:
+            for p in range(s, e):
+                out[p] = float(self.times[i])
+                i += 1
+        return out
+
+    def ready_view(self, base: float) -> Optional[IndexReadyView]:
+        if self.times is None or not len(self.times):
+            return None
+        times = self.times
+        return IndexReadyView(
+            self.populated_runs, lambda i: float(base + times[i]), len(times)
+        )
 
 
 def migrate_time_us(
@@ -92,3 +202,93 @@ def plan_population(
         ready[p] = t
     total = max(t, evict_bytes / d2h)
     return MigrationResult(evict_bytes, pop_bytes, total, ready)
+
+
+def plan_population_runs(
+    platform: Platform,
+    populate_runs: Sequence[PageRun],
+    evict_count: int,
+    pipelined: bool = True,
+    page_size: int = 0,
+) -> RunMigration:
+    """Run-native :func:`plan_population`: identical per-page ready times
+    (same float rounding as the scalar recurrence), computed as numpy arrays
+    over population indices instead of a Python loop over a page dict."""
+    ps = page_size or platform.page_size
+    d2h = platform.d2h_gbps * 1e3
+    h2d = platform.h2d_gbps * 1e3
+    cap = platform.duplex_cap_gbps * 1e3
+
+    n = run_page_count(populate_runs)
+    evict_bytes = evict_count * ps
+    pop_bytes = n * ps
+    if n == 0:
+        total = evict_bytes / d2h if not pipelined else max(0.0, evict_bytes / d2h)
+        return RunMigration(evict_bytes, pop_bytes, total, [], None)
+
+    idx = np.arange(1, n + 1, dtype=np.int64)  # (i + 1)
+
+    if not pipelined:
+        t0 = evict_bytes / d2h
+        times = t0 + (idx * ps) / h2d
+        total = t0 + pop_bytes / h2d
+        return RunMigration(evict_bytes, pop_bytes, total, list(populate_runs), times)
+
+    both_active_rate = min(h2d, cap - min(d2h, cap / 2.0)) if cap < d2h + h2d else h2d
+    step = ps / both_active_rate
+    s = np.zeros(n)
+    if evict_count > 0:
+        e = min(evict_count, n)
+        s[:e] = (idx[:e] * ps) / d2h
+    times = _max_add_scan(s, step)
+    total = max(float(times[-1]), evict_bytes / d2h)
+    return RunMigration(evict_bytes, pop_bytes, total, list(populate_runs), times)
+
+
+def _max_add_scan(s: np.ndarray, step: float) -> np.ndarray:
+    """Exact vectorization of ``t_i = max(t_{i-1}, s_i) + step`` (t_{-1}=0).
+
+    The recurrence alternates between two regimes — *stalled* (``s`` wins
+    every step, so ``t_i = s_i + step`` elementwise) and *streaming* (``t``
+    wins, a pure sequential accumulation, which ``np.add.accumulate``
+    reproduces with the same left-to-right rounding). Each regime is solved
+    in one vector op and the boundary found by comparison, so the result is
+    bit-for-bit the scalar loop's at O(regime switches) vector passes; a
+    pathological alternation falls back to the scalar loop."""
+    n = len(s)
+    t = np.empty(n)
+    i = 0
+    prev = 0.0
+    for _ in range(64):
+        if i >= n:
+            return t
+        # streaming candidate: pure accumulation from prev
+        arr = np.full(n - i + 1, step)
+        arr[0] = prev
+        cand = np.add.accumulate(arr)[1:]
+        t_prev = np.empty(n - i)
+        t_prev[0] = prev
+        t_prev[1:] = cand[:-1]
+        viol = s[i:] > t_prev
+        if not viol.any():
+            t[i:] = cand
+            return t
+        j = int(np.argmax(viol))
+        t[i : i + j] = cand[:j]
+        i += j
+        # stalled candidate: t_k = s_k + step while s keeps outpacing t
+        tr = s[i:] + step
+        ok = s[i + 1 :] > tr[:-1]
+        if ok.all():
+            m = n - i
+        else:
+            m = int(np.argmin(ok)) + 1
+        t[i : i + m] = tr[:m]
+        i += m
+        prev = float(t[i - 1])
+    # degenerate regime flapping: scalar reference (still exact)
+    while i < n:
+        prev = max(prev, float(s[i])) + step
+        t[i] = prev
+        i += 1
+    return t

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.pages import PageRun, expand_runs, pages_to_runs
 from repro.core.timeline import TaskTimeline
@@ -90,9 +90,13 @@ def build_plan(
     return OptPlan(groups, first_order, global_seq)
 
 
-def belady_eviction_order(plan: OptPlan, resident: Sequence[int]) -> List[int]:
+def belady_eviction_order(plan: OptPlan, resident: Iterable[int]) -> List[int]:
     """Expected eviction order under the madvise-walk: pages never referenced
-    in the horizon first, then by *decreasing* distance to next use."""
+    in the horizon first, then by *decreasing* distance to next use.
+
+    ``resident`` may be any iterable — in particular the pool's lazy
+    ``iter_eviction()`` view, so OPT-path callers never copy the full
+    resident list just to re-sort it."""
     next_use: Dict[int, int] = {}
     for i, group in enumerate(plan.timeslice_page_groups):
         for p in group:

@@ -212,6 +212,20 @@ def pages_to_runs(pages: Sequence[int]) -> Tuple[PageRun, ...]:
     return tuple((s, e) for s, e in runs)
 
 
+def clip_runs(runs: Iterable[PageRun], max_pages: int) -> List[PageRun]:
+    """First ``max_pages`` pages of ``runs`` in order (run-level equivalent
+    of ``expand_runs(runs)[:max_pages]``)."""
+    out: List[PageRun] = []
+    left = max_pages
+    for s, e in runs:
+        if left <= 0:
+            break
+        take = min(left, e - s)
+        out.append((s, s + take))
+        left -= take
+    return out
+
+
 class RunSet:
     """Sorted disjoint interval set with insert-and-report-new support.
 

@@ -132,3 +132,15 @@ def plan_switch(
     """Full incremental plan for one context switch."""
     cuts = compute_cuts(timeline, helpers)
     return RunPlan(cuts, run_groups(helpers, cuts), first_access_runs(helpers, cuts))
+
+
+def merged_command_runs(cmds, space) -> List[PageRun]:
+    """Merged (sorted, disjoint) ground-truth page runs of a command window —
+    the macro-stepper's residency precondition: when the merged group is fully
+    resident, every command in the window executes with zero stall and no
+    backend interaction, so the simulator may advance the whole window in one
+    tight loop."""
+    runs: List[PageRun] = []
+    for cmd in cmds:
+        runs.extend(cmd.true_page_runs(space))
+    return merge_runs(runs)

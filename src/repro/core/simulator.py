@@ -14,6 +14,14 @@ memory backends:
 The engine models *early execution* (§6.3): a kernel starts as soon as its own
 pages are ready, not when the whole working-set migration finishes.
 
+Execution is *run-native* end to end: commands carry cached page-run tuples,
+residency/ready queries are interval operations, and once a timeslice's
+migration has landed the engine *macro-steps* — it verifies the upcoming
+command window's merged run group is fully resident once, then advances the
+whole window in a tight loop with no per-command backend calls (bit-for-bit
+identical results; see EXPERIMENTS.md "The macro-stepping invariant").
+``pool="paged"`` swaps in the per-page reference pool for equivalence runs.
+
 The task population is *dynamic*: besides the static ``programs`` set, callers
 may supply ``task_events`` — timed :class:`TaskArrival`s whose programs are
 admitted (optionally gated by an admission controller), run to completion
@@ -25,15 +33,17 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from itertools import islice
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.commands import Command
 from repro.core.demand_paging import DemandPager
 from repro.core.hardware import Platform
-from repro.core.hbm import HBMPool
+from repro.core.hbm import HBMPool, make_pool
 from repro.core.memory_manager import Coordinator, TaskHelper
-from repro.core.migration import plan_population
-from repro.core.pages import AddressSpace
+from repro.core.migration import IndexReadyView, plan_population_runs
+from repro.core.pages import AddressSpace, PageRun, clip_runs, pages_to_runs, run_page_count
+from repro.core.planner import merged_command_runs
 from repro.core.predictor import (
     AllocationPredictor,
     OraclePredictor,
@@ -56,11 +66,23 @@ MIN_LOOKAHEAD_ITERS = 2  # async launch window (queued-but-not-executed)
 
 class Backend:
     name = "base"
+    # True when executing a fully-resident command still mutates LRU state
+    # (demand paging touches pages); the macro-stepper must replicate that
+    resident_touch = False
+    # True when on_switch reads the scheduling timeline (msched/ideal); the
+    # engine skips building the multi-entry timeline otherwise — at serving
+    # scale (2 ms TSG quanta, hundreds of tasks) that build dominates UM runs
+    uses_timeline = False
 
     def on_switch(self, task_id: int, timeline: TaskTimeline, now: float):
-        return 0.0, {}
+        """Returns (control_us, ready_view | None). The view answers
+        ``max_ready(runs)`` — the time the last-arriving page of ``runs``
+        lands — in O(runs) instead of a per-page dict probe."""
+        return 0.0, None
 
-    def on_command(self, cmd: Command, pages: List[int], now: float) -> float:
+    def on_command(
+        self, cmd: Command, runs: Sequence[PageRun], now: float
+    ) -> float:
         return 0.0
 
     def admit_task(self, prog: TaskProgram) -> Optional[TaskHelper]:
@@ -80,12 +102,13 @@ class Backend:
 
 class UMBackend(Backend):
     name = "um"
+    resident_touch = True
 
     def __init__(self, platform: Platform, pool: HBMPool, page_size: int = 0):
         self.pager = DemandPager(platform, pool, page_size)
 
-    def on_command(self, cmd, pages, now):
-        return self.pager.access(pages)
+    def on_command(self, cmd, runs, now):
+        return self.pager.access_runs(runs)
 
     def faults(self):
         return self.pager.stats.faults
@@ -96,6 +119,7 @@ class UMBackend(Backend):
 
 class MSchedBackend(Backend):
     name = "msched"
+    uses_timeline = True
 
     def __init__(
         self,
@@ -136,17 +160,14 @@ class MSchedBackend(Backend):
         report = self.coordinator.on_context_switch(task_id, timeline)
         self._migrated += report.populated_pages
         ctrl = 0.0 if self.control_free else report.madvise_us
-        ready = {
-            p: now + ctrl + t for p, t in report.migration.page_ready_us.items()
-        }
-        return ctrl, ready
+        return ctrl, report.migration.ready_view(now + ctrl)
 
-    def on_command(self, cmd, pages, now):
+    def on_command(self, cmd, runs, now):
         # mispredictions fall back to standard demand paging (§5.2)
-        missing = self.pool.missing_pages(pages)
+        missing = self.pool.missing_runs(runs)
         if not missing:
             return 0.0
-        return self.fallback.access(missing)
+        return self.fallback.access_runs(missing)
 
     def faults(self):
         return self.fallback.stats.faults
@@ -171,10 +192,29 @@ class IdealBackend(MSchedBackend):
             self.platform.h2d_gbps * 1e3, self.platform.duplex_cap_gbps * 1e3 / 2
         )
         ps = self.page_size
-        ready = {}
-        for i, p in enumerate(report.migration.page_ready_us):
-            ready[p] = now + (i + 1) * ps / rate
-        return 0.0, ready
+        runs = report.migration.populated_runs
+        n = run_page_count(runs)
+        if n == 0:
+            return 0.0, None
+        return 0.0, IndexReadyView(
+            runs, lambda i: now + ((i + 1) * ps) / rate, n
+        )
+
+
+def _task_footprint_runs(prog: "TaskProgram") -> List[PageRun]:
+    """Whole-footprint page runs in buffer (base) order — the SUV prefetch
+    order and the warm-start fill order."""
+    runs: List[PageRun] = []
+    for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
+        pages = prog.space.pages_of_extent((b.base, b.size))
+        if not len(pages):
+            continue
+        s, e = pages.start, pages.stop
+        if runs and runs[-1][1] == s:
+            runs[-1] = (runs[-1][0], e)
+        else:
+            runs.append((s, e))
+    return runs
 
 
 class SUVBackend(Backend):
@@ -189,36 +229,33 @@ class SUVBackend(Backend):
         self.pool = pool
         self.page_size = page_size or platform.page_size
         self.pager = DemandPager(platform, pool, page_size)
-        self._task_pages: Dict[int, List[int]] = {}
+        self._task_runs: Dict[int, List[PageRun]] = {}
         for prog in programs:
             self.admit_task(prog)
         self._migrated = 0
 
     def admit_task(self, prog):
-        pages: List[int] = []
-        for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
-            pages.extend(prog.space.pages_of_extent((b.base, b.size)))
-        self._task_pages[prog.task_id] = pages
+        self._task_runs[prog.task_id] = _task_footprint_runs(prog)
         return None
 
     def retire_task(self, task_id):
-        self._task_pages.pop(task_id, None)
+        self._task_runs.pop(task_id, None)
 
     def on_switch(self, task_id, timeline, now):
-        pages = self._task_pages.get(task_id, [])
+        runs = self._task_runs.get(task_id, [])
         # cap the prefetch at HBM capacity (driver clamps)
-        pages = pages[: self.pool.capacity]
-        populated, evicted = self.pool.migrate(pages)
-        self._migrated += len(populated)
-        mig = plan_population(
-            self.platform, populated, len(evicted), False, self.page_size
+        runs = clip_runs(runs, self.pool.capacity)
+        populated, evicted = self.pool.migrate_runs(runs)
+        self._migrated += run_page_count(populated)
+        mig = plan_population_runs(
+            self.platform, populated, run_page_count(evicted), False,
+            self.page_size,
         )
-        ready = {p: now + t for p, t in mig.page_ready_us.items()}
-        return 0.0, ready
+        return 0.0, mig.ready_view(now)
 
-    def on_command(self, cmd, pages, now):
-        missing = self.pool.missing_pages(pages)
-        return self.pager.access(missing) if missing else 0.0
+    def on_command(self, cmd, runs, now):
+        missing = self.pool.missing_runs(runs)
+        return self.pager.access_runs(missing) if missing else 0.0
 
     def faults(self):
         return self.pager.stats.faults
@@ -586,6 +623,7 @@ def simulate(
     admission: Optional[AdmissionController] = None,
     profile_set: Optional[Sequence[TaskProgram]] = None,
     page_size: int = 0,
+    pool: str = "run",
 ) -> SimResult:
     if not page_size:
         if programs:
@@ -603,7 +641,7 @@ def simulate(
                 "pool residency keys would not be comparable"
             )
     cap_bytes = capacity_bytes or platform.hbm_bytes
-    pool = HBMPool(max(1, cap_bytes // page_size))
+    pool = make_pool(pool, max(1, cap_bytes // page_size))
     backend, helpers = make_backend(
         backend_name, platform, pool, programs, predictor_kind, pipelined,
         page_size, planning, profile_set,
@@ -621,15 +659,13 @@ def simulate(
         tasks[prog.task_id] = rt
         pool.register_task(prog.task_id, prog.space.page_span())
 
-    # warm start: fill HBM fairly (tasks ran before the measuring window)
+    # warm start: fill HBM fairly (tasks ran before the measuring window).
+    # migrate_runs over a fresh pool appends the exact page order the old
+    # per-page populate loop produced, at O(runs)
     if prepopulate:
         share = pool.capacity // max(1, len(programs))
         for prog in programs:
-            pages: List[int] = []
-            for b in sorted(prog.space.buffers.values(), key=lambda b: b.base):
-                pages.extend(prog.space.pages_of_extent((b.base, b.size)))
-            for p in pages[:share]:
-                pool.populate(p)
+            pool.migrate_runs(clip_runs(_task_footprint_runs(prog), share))
 
     # -- dynamic lifecycle state --------------------------------------------
     dynamic = bool(task_events)
@@ -655,6 +691,8 @@ def simulate(
         )
 
     def _admit(ev: TaskArrival, rec: RequestRecord, now: float) -> None:
+        nonlocal sched_cache
+        sched_cache = None
         prog = ev.program
         if prog.task_id in used_task_ids:
             raise ValueError(
@@ -675,6 +713,8 @@ def simulate(
             _retire(prog.task_id, now)
 
     def _retire(tid: int, now: float) -> None:
+        nonlocal sched_cache
+        sched_cache = None
         rt = tasks.pop(tid)
         backend.retire_task(tid)
         helpers.pop(tid, None)
@@ -724,6 +764,27 @@ def simulate(
             waiting.append((ev, rec))
         _drain_waiting(now)
 
+    def _complete(tid: int, rt: _RunTask, now: float) -> bool:
+        """Post-iteration bookkeeping shared by the per-command and macro
+        paths; returns True when the task finished and retired (end the
+        timeslice)."""
+        if rt.current_arrival is not None:
+            rt.stats.latencies_us.append(now - rt.current_arrival)
+            rt.current_arrival = None
+            # next pending arrival (if already due) picked up by runnable()
+        if dynamic:
+            rec = rec_by_tid.get(tid)
+            if rec is not None and rt.stats.completions == 1:
+                rec.first_iter_us = now
+        if rt.finished():
+            # finite programs retire regardless of how they entered —
+            # a drained static task must not pin the scheduler forever
+            _retire(tid, now)
+            if dynamic:
+                _process_arrivals(now)  # freed pages may unblock the queue
+            return True
+        return False
+
     # purge degenerate zero-iteration static programs before the clock starts
     for tid in [tid for tid, rt in tasks.items() if rt.finished()]:
         _retire(tid, 0.0)
@@ -731,17 +792,27 @@ def simulate(
     t = 0.0
     switches = 0
     control_us = 0.0
+    sched_cache: Optional[Dict[int, SchedTask]] = None
     while t < sim_us:
         if dynamic:
             _process_arrivals(t)
-        sched = {
-            tid: SchedTask(
-                tid,
-                priority=(priorities or {}).get(tid, 0),
-                runnable=rt.runnable(t),
-            )
-            for tid, rt in tasks.items()
-        }
+        if sched_cache is not None:
+            sched = sched_cache
+        else:
+            sched = {
+                tid: SchedTask(
+                    tid,
+                    priority=(priorities or {}).get(tid, 0),
+                    runnable=rt.runnable(t),
+                )
+                for tid, rt in tasks.items()
+            }
+            # runnable-ness only changes with the clock in RT-arrivals mode;
+            # otherwise the view is invalidated solely by admit/retire, so it
+            # can be reused across the (possibly hundreds of thousands of)
+            # switches of a long serving trace
+            if all(rt.arrivals is None for rt in tasks.values()):
+                sched_cache = sched
         entry = policy.next_entry(sched)
         if entry is None:
             # idle until the next RT arrival or task-arrival event
@@ -760,8 +831,14 @@ def simulate(
                 continue
             break
         # the timeline's first entry must be the task about to run —
-        # next_entry() already rotated the policy's run queue past it
-        timeline = TaskTimeline([entry] + policy.timeline(sched).entries)
+        # next_entry() already rotated the policy's run queue past it.
+        # Backends that never read the plan (um/suv) skip the multi-entry
+        # build: at 2 ms TSG quanta over hundreds of serving tasks it is
+        # pure overhead
+        if backend.uses_timeline:
+            timeline = TaskTimeline([entry] + policy.timeline(sched).entries)
+        else:
+            timeline = TaskTimeline([entry])
         ctrl, ready = backend.on_switch(entry.task_id, timeline, t)
         t += ctrl
         control_us += ctrl
@@ -776,43 +853,75 @@ def simulate(
                 "commands; its iteration() produced an empty command list"
             )
         budget = entry.timeslice_us
-        slice_start = t
+        space = rt.prog.space
+        tid = entry.task_id
+        ready_max = ready.global_max if ready is not None else None
+        # macro-stepping: once migration has landed (past the last ready
+        # time), check the upcoming command window's merged working set once;
+        # while it is fully resident, every command runs with zero stall and
+        # no backend interaction, so advance the window in a tight loop.
+        # A failed check disables re-checking until pool state changes again
+        # (any command that actually stalls re-arms it).
+        try_macro = cached_decode
         while budget > 0 and rt.runnable(t) and rt.queue:
+            if try_macro and (ready_max is None or t >= ready_max):
+                # cheap precheck: a window can only qualify if its first
+                # command is fully resident — under fault-thrash (UM) this
+                # skips the merged-group build entirely
+                if not pool.all_resident_runs(rt.queue[0].true_page_runs(space)):
+                    try_macro = False
+                    window = 0
+                else:
+                    window = _macro_window(rt.queue, budget)
+                merged = (
+                    merged_command_runs(islice(rt.queue, window), space)
+                    if window
+                    else None
+                )
+                if merged is not None and pool.all_resident_runs(merged):
+                    touches = backend.resident_touch
+                    ended = False
+                    while (
+                        window > 0 and budget > 0 and rt.queue
+                        and rt.runnable(t)
+                    ):
+                        cmd = rt.queue[0]
+                        if touches:
+                            pool.touch_runs(cmd.true_page_runs(space))
+                        end = t + cmd.latency_us  # start == t, stall == 0
+                        rt.stats.commands += 1
+                        rt.stats.busy_us += end - t
+                        budget -= end - t
+                        t = end
+                        window -= 1
+                        if rt.advance(t) and _complete(tid, rt, t):
+                            ended = True
+                            break
+                    if ended:
+                        break
+                    continue  # window exhausted: re-derive it
+                try_macro = False
             cmd = rt.peek()
             # cached run-length decode; the legacy path re-walks the extents
             # per executed command (preserved for the sim-throughput baseline)
             if cached_decode:
-                pages = cmd.true_page_list(rt.prog.space)
+                runs = cmd.true_page_runs(space)
             else:
-                pages = _true_page_order(rt.prog.space, cmd)
+                runs = pages_to_runs(_true_page_order(space, cmd))
             start = t
-            if ready:
-                ready_get = ready.get
-                for p in pages:
-                    r = ready_get(p)
-                    if r is not None and r > start:
-                        start = r
-            stall = backend.on_command(cmd, pages, start)
+            if ready is not None and start < ready_max:
+                r = ready.max_ready(runs)
+                if r is not None and r > start:
+                    start = r
+            stall = backend.on_command(cmd, runs, start)
+            if stall > 0.0:
+                try_macro = cached_decode  # residency changed: re-arm
             end = start + stall + cmd.latency_us
             rt.stats.commands += 1
             rt.stats.busy_us += end - t
             budget -= end - t
             t = end
-            completed = rt.advance(t)
-            if completed and rt.current_arrival is not None:
-                rt.stats.latencies_us.append(t - rt.current_arrival)
-                rt.current_arrival = None
-                # next pending arrival (if already due) picked up by runnable()
-            if completed and dynamic:
-                rec = rec_by_tid.get(entry.task_id)
-                if rec is not None and rt.stats.completions == 1:
-                    rec.first_iter_us = t
-            if completed and rt.finished():
-                # finite programs retire regardless of how they entered —
-                # a drained static task must not pin the scheduler forever
-                _retire(entry.task_id, t)
-                if dynamic:
-                    _process_arrivals(t)  # freed pages may unblock the queue
+            if rt.advance(t) and _complete(tid, rt, t):
                 break
 
     per_task = {tid: rt.stats for tid, rt in tasks.items()}
@@ -839,3 +948,17 @@ def _true_page_order(space: AddressSpace, cmd: Command) -> List[int]:
                 seen.add(p)
                 order.append(p)
     return order
+
+
+def _macro_window(queue: "Deque[Command]", budget_us: float) -> int:
+    """Number of queued commands a zero-stall execution would start within
+    ``budget_us`` (the slice consumption rule: a command starts while budget
+    remains > 0)."""
+    rem = budget_us
+    k = 0
+    for cmd in queue:
+        if rem <= 0:
+            break
+        rem -= cmd.latency_us
+        k += 1
+    return k

@@ -118,12 +118,15 @@ def serve_trace(
     slo: Optional[SLOSpec] = None,
     sim_us: Optional[float] = None,
     drain_factor: float = 8.0,
+    pool: str = "run",
 ) -> ServeReport:
     """Replay ``trace`` and measure serving quality.
 
     ``sim_us`` defaults to ``drain_factor`` × the trace duration so admitted
     requests get a chance to drain; requests still unfinished at the horizon
-    count against goodput (they missed every SLO).
+    count against goodput (they missed every SLO). ``pool`` selects the HBM
+    residency implementation (``"run"`` default; ``"paged"`` is the per-page
+    equivalence reference — long traces are intractable on it).
     """
     slo = slo or SLOSpec()
     events = build_events(trace, page_size=page_size)
@@ -146,6 +149,7 @@ def serve_trace(
         profile_set=representative_requests(trace, page_size=page_size),
         page_size=page_size,
         prepopulate=False,
+        pool=pool,
     )
     # peak concurrent admitted footprint = the oversubscription actually hit
     peak_bytes = _peak_admitted_bytes(footprints, res)

@@ -1,0 +1,433 @@
+"""Run-native memory hierarchy equivalence suite.
+
+The run-native ``HBMPool`` (interval segments + LRU chain), the vectorized
+``DemandPager`` fault path, the run-native migration schedule, and the
+simulator's macro-stepper must all be *behaviorally invisible*: every
+residency decision, eviction order, counter, stall time, and SimResult must
+match the per-page reference implementations (``HBMPoolPaged`` + scalar
+loops) bit for bit. The golden fingerprints at the bottom were recorded on
+the pre-refactor engine (PR 2) for all four backends.
+"""
+import random
+
+import pytest
+
+try:  # optional dev dependency (requirements-dev.txt)
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    st = None
+
+from repro.core.demand_paging import DemandPager
+from repro.core.hardware import RTX5080
+from repro.core.hbm import HBMPool, HBMPoolPaged, make_pool
+from repro.core.migration import plan_population, plan_population_runs
+from repro.core.pages import (
+    clip_runs,
+    expand_runs,
+    merge_runs,
+    pages_to_runs,
+    run_page_count,
+)
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import LLMDecodeTask, MatMulTask, VecAddTask, combo
+
+
+# --------------------------------------------------------------------------
+# randomized op-sequence equivalence: HBMPool vs HBMPoolPaged
+# --------------------------------------------------------------------------
+
+
+def _rand_runs(rnd, n_pages, max_runs=4):
+    runs = []
+    for _ in range(rnd.randrange(1, max_runs + 1)):
+        s = rnd.randrange(0, n_pages)
+        runs.append((s, s + rnd.randrange(1, max(2, n_pages // 4))))
+    return runs
+
+
+def _pool_state(pool):
+    return (
+        pool.eviction_order(),
+        pool.resident_count(),
+        pool.evictions,
+        pool.populations,
+        pool.freed_pages,
+    )
+
+
+def _check_op_sequence_equivalence(seed, capacity, n_pages, n_ops):
+    """Drive both pools through an identical mixed op sequence and assert
+    identical residency, eviction order, and counters after every op."""
+    rnd = random.Random(seed)
+    a, b = HBMPool(capacity), HBMPoolPaged(capacity)
+    spans = {}
+    for step in range(n_ops):
+        op = rnd.randrange(8)
+        if op == 0:
+            p = rnd.randrange(n_pages)
+            assert a.populate(p) == b.populate(p)
+        elif op == 1:
+            runs = _rand_runs(rnd, n_pages)
+            ra = a.migrate_runs(runs)
+            rb = b.migrate_runs(runs)
+            assert tuple(map(expand_runs, ra)) == tuple(map(expand_runs, rb))
+        elif op == 2:
+            group = merge_runs(_rand_runs(rnd, n_pages))
+            assert a.madvise_runs(group) == b.madvise_runs(group)
+        elif op == 3:
+            runs = _rand_runs(rnd, n_pages)
+            a.touch_runs(runs)
+            b.touch_runs(runs)
+        elif op == 4:
+            runs = _rand_runs(rnd, n_pages)
+            a.drop_runs(runs)
+            b.drop_runs(runs)
+        elif op == 5:
+            tid = rnd.randrange(4)
+            if tid in spans:
+                assert a.free_task(tid) == b.free_task(tid)
+                del spans[tid]
+            else:
+                s = rnd.randrange(0, n_pages)
+                span = (s, s + rnd.randrange(1, n_pages // 2 + 1))
+                spans[tid] = span
+                a.register_task(tid, span)
+                b.register_task(tid, span)
+        elif op == 6:
+            p = rnd.randrange(n_pages)
+            a.touch(p)
+            b.touch(p)
+        else:
+            runs = _rand_runs(rnd, n_pages)
+            assert expand_runs(a.missing_runs(runs)) == expand_runs(
+                b.missing_runs(runs)
+            )
+            assert a.all_resident_runs(runs) == b.all_resident_runs(runs)
+        assert _pool_state(a) == _pool_state(b), (seed, step, op)
+    assert list(a.iter_eviction()) == list(b.iter_eviction())
+    assert expand_runs(a.eviction_runs()) == expand_runs(b.eviction_runs())
+
+
+if st is not None:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(0, 99999),
+        capacity=st.integers(2, 24),
+        n_pages=st.integers(8, 64),
+        n_ops=st.integers(10, 80),
+    )
+    def test_property_pool_op_sequence_equivalence(seed, capacity, n_pages, n_ops):
+        _check_op_sequence_equivalence(seed, capacity, n_pages, n_ops)
+
+else:  # deterministic fallback when hypothesis is unavailable
+
+    @pytest.mark.parametrize("seed", range(40))
+    def test_property_pool_op_sequence_equivalence(seed):
+        rnd = random.Random(7000 + seed)
+        _check_op_sequence_equivalence(
+            seed,
+            rnd.randint(2, 24),
+            rnd.randint(8, 64),
+            rnd.randint(10, 80),
+        )
+
+
+# --------------------------------------------------------------------------
+# migrate_runs golden: run-granularity (populated, evicted) semantics
+# --------------------------------------------------------------------------
+
+
+def test_migrate_runs_golden_run_semantics():
+    """The run-native default returns *runs* whose expansion is exactly the
+    page-level (populated, evicted) the per-page path produces — including
+    protection of resident stretches and head-order victim identity."""
+    run = HBMPool(8)
+    paged = HBMPoolPaged(8)
+    for p in (10, 11, 12, 30, 31, 50):
+        run.populate(p)
+        paged.populate(p)
+    want = [(10, 14), (29, 32)]  # mixes resident stretches and gaps
+    pop_r, ev_r = run.migrate_runs(want)
+    pop_p, ev_p = paged.migrate(p for s, e in want for p in range(s, e))
+    assert expand_runs(pop_r) == pop_p == [13, 29]
+    assert expand_runs(ev_r) == ev_p == []
+    assert run.eviction_order() == paged.eviction_order() == [
+        50, 10, 11, 12, 13, 29, 30, 31,
+    ]
+    # under pressure, victims cascade into the migrating group itself: pages
+    # protected early can be reclaimed to make room for later misses
+    pop_r, ev_r = run.migrate_runs([(60, 66)])
+    pop_p, ev_p = paged.migrate(range(60, 66))
+    assert expand_runs(pop_r) == pop_p == list(range(60, 66))
+    assert expand_runs(ev_r) == ev_p == [50, 10, 11, 12, 13, 29]
+    assert run.eviction_order() == paged.eviction_order()
+    # a run larger than the whole pool: leading pages are populated then
+    # reclaimed before the tail lands (per-page loop dynamics)
+    pop_r, ev_r = run.migrate_runs([(100, 120)])
+    pop_p, ev_p = paged.migrate(range(100, 120))
+    assert expand_runs(pop_r) == pop_p == list(range(100, 120))
+    assert expand_runs(ev_r) == ev_p
+    assert run.eviction_order() == paged.eviction_order() == list(range(112, 120))
+    assert (run.populations, run.evictions) == (
+        paged.populations,
+        paged.evictions,
+    )
+
+
+# --------------------------------------------------------------------------
+# DemandPager: vectorized fault servicing == per-page reference
+# --------------------------------------------------------------------------
+
+
+def _drive_pagers(seed, page_size, capacity):
+    """Random access patterns through access_runs (run pool) vs access
+    (paged pool): stalls and stats must match bit for bit."""
+    rnd = random.Random(seed)
+    run_pool, paged_pool = HBMPool(capacity), HBMPoolPaged(capacity)
+    a = DemandPager(RTX5080, run_pool, page_size)
+    b = DemandPager(RTX5080, paged_pool, page_size)
+    for _ in range(12):
+        runs = pages_to_runs(
+            sorted(set(rnd.sample(range(160), rnd.randrange(1, 60))))
+        )
+        sa = a.access_runs(runs)
+        sb = b.access(expand_runs(runs))
+        assert sa == sb, (seed, page_size, capacity)
+        assert a.stats == b.stats
+        assert run_pool.eviction_order() == paged_pool.eviction_order()
+        assert (run_pool.evictions, run_pool.populations) == (
+            paged_pool.evictions,
+            paged_pool.populations,
+        )
+
+
+@pytest.mark.parametrize("page_size", [4096, 16 << 10, 64 << 10, 1 << 20])
+def test_pager_vectorized_matches_reference(page_size):
+    for seed in range(6):
+        rnd = random.Random(seed)
+        _drive_pagers(seed, page_size, rnd.randrange(4, 140))
+
+
+def test_batch_evict_single_resident_page_regression():
+    """Regression (over-eviction edge): with one resident page and a full
+    capacity-1 pool, the batch path must stand down — populate's own head
+    eviction makes room — instead of batch-reclaiming the only page. Counts
+    stay identical because the eviction moves to populate."""
+    pool = HBMPool(1)
+    pager = DemandPager(RTX5080, pool, 1 << 20)
+    pool.populate(7)
+    assert pool.resident_count() == 1 and pool.free_pages() == 0
+    pager._batch_evict(batch=8)
+    # the batch path evicted nothing: the sole resident page survives
+    assert pool.resident(7) and pool.resident_count() == 1
+    assert pager.stats.evicted_pages == 0
+    # a faulting access still makes progress, with exactly one eviction
+    stall = pager.access_runs([(9, 10)])
+    assert stall > 0
+    assert pool.eviction_order() == [9]
+    assert pager.stats.evicted_pages == 1 and pool.evictions == 1
+    # and the paged reference agrees end to end
+    ppool = HBMPoolPaged(1)
+    ppager = DemandPager(RTX5080, ppool, 1 << 20)
+    ppool.populate(7)
+    assert ppager.access([9]) == stall
+    assert ppager.stats == pager.stats
+    assert ppool.eviction_order() == [9]
+
+
+# --------------------------------------------------------------------------
+# run-native migration schedule == per-page plan_population
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_plan_population_runs_matches_per_page(pipelined):
+    rnd = random.Random(3)
+    ps = 1 << 20
+    for trial in range(20):
+        n_runs = rnd.randrange(0, 6)
+        runs, base = [], 0
+        for _ in range(n_runs):
+            base += rnd.randrange(1, 50)
+            runs.append((base, base + rnd.randrange(1, 40)))
+            base = runs[-1][1]
+        rnd.shuffle(runs)  # population order != ascending page order
+        evict = rnd.randrange(0, 2 * max(1, run_page_count(runs)))
+        ref = plan_population(RTX5080, expand_runs(runs), evict, pipelined, ps)
+        new = plan_population_runs(RTX5080, runs, evict, pipelined, ps)
+        assert new.evict_bytes == ref.evict_bytes
+        assert new.populate_bytes == ref.populate_bytes
+        assert new.total_us == ref.total_us
+        assert new.page_ready_us == ref.page_ready_us
+        # the run-queryable view answers the same max the per-page dict scan
+        # produced, for arbitrary query runs
+        view = new.ready_view(base=123.5)
+        ref_view = ref.ready_view(base=123.5)
+        if view is None:
+            assert ref_view is None
+            continue
+        assert view.global_max == ref_view.global_max
+        for _ in range(10):
+            q = _rand_runs(rnd, base + 10)
+            assert view.max_ready(q) == ref_view.max_ready(q), (trial, q)
+
+
+# --------------------------------------------------------------------------
+# full-stack: pool="paged" is a bit-for-bit equivalence mode; the
+# macro-stepper (run pool, incremental planning) changes nothing
+# --------------------------------------------------------------------------
+
+
+def _fingerprint(res):
+    return (
+        res.sim_us,
+        res.switches,
+        res.faults,
+        res.migrated_bytes,
+        res.control_us,
+        res.total_completions(),
+        tuple(
+            (tid, s.completions, s.commands, s.busy_us)
+            for tid, s in sorted(res.per_task.items())
+        ),
+    )
+
+
+def _combo_small(backend, pool_kind, planning="incremental"):
+    progs = [
+        VecAddTask(0, n_bytes=2 << 20, kernels_per_iter=3, page_size=16 << 10),
+        MatMulTask(1, dim=512, n_matrices=6, page_size=16 << 10),
+    ]
+    foot = sum(p.footprint_bytes() for p in progs)
+    return simulate(
+        progs,
+        RTX5080,
+        backend,
+        capacity_bytes=int(foot / 1.6),
+        sim_us=120_000.0,
+        policy=RoundRobinPolicy(5_000.0),
+        predictor_kind="oracle",
+        planning=planning,
+        pool=pool_kind,
+    )
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_paged_pool_mode_bit_for_bit(backend):
+    """run-native pool + vectorized pager + macro-stepper vs per-page pool +
+    scalar pager (the complete pre-refactor execution path)."""
+    assert _fingerprint(_combo_small(backend, "run")) == _fingerprint(
+        _combo_small(backend, "paged")
+    )
+
+
+def test_macro_step_invariant_under_pressure_and_slack():
+    """Macro-stepping fires when working sets are resident (slack capacity)
+    and must be inert either way: identical SimResult vs the legacy planner,
+    which never macro-steps."""
+    for cap_ratio in (0.8, 1.6):  # slack and oversubscribed
+        progs = [
+            LLMDecodeTask(0, page_size=1 << 20, max_context=512),
+            LLMDecodeTask(1, page_size=1 << 20, max_context=512),
+        ]
+        foot = sum(p.footprint_bytes() for p in progs)
+        kw = dict(
+            capacity_bytes=int(foot / cap_ratio),
+            sim_us=300_000.0,
+            policy=RoundRobinPolicy(50_000.0),
+            predictor_kind="oracle",
+        )
+        new = simulate(progs, RTX5080, "msched", planning="incremental", **kw)
+        progs2 = [
+            LLMDecodeTask(0, page_size=1 << 20, max_context=512),
+            LLMDecodeTask(1, page_size=1 << 20, max_context=512),
+        ]
+        old = simulate(progs2, RTX5080, "msched", planning="legacy", **kw)
+        assert _fingerprint(new) == _fingerprint(old), cap_ratio
+
+
+def test_make_pool_kinds():
+    assert isinstance(make_pool("run", 4), HBMPool)
+    assert isinstance(make_pool("paged", 4), HBMPoolPaged)
+    with pytest.raises(ValueError, match="pool kind"):
+        make_pool("nope", 4)
+    with pytest.raises(ValueError, match="pool kind"):
+        simulate([], RTX5080, "um", sim_us=1.0, pool="nope")
+
+
+def test_clip_runs():
+    runs = [(0, 4), (10, 12), (20, 25)]
+    assert clip_runs(runs, 5) == [(0, 4), (10, 11)]
+    assert clip_runs(runs, 0) == []
+    assert expand_runs(clip_runs(runs, 100)) == expand_runs(runs)
+
+
+# --------------------------------------------------------------------------
+# golden fingerprints: pre-refactor engine values, all four backends
+# --------------------------------------------------------------------------
+
+_STATIC_GOLDEN = {
+    "um": (100261.51447250205, 10, 315, 328466432, 0.0, 5190),
+    "msched": (103033.16203421363, 10, 0, 130809856, 2830.7400000000002, 5973),
+    "ideal": (100188.02527081216, 10, 0, 130809856, 0.0, 5977),
+    "suv": (100096.70406610666, 10, 0, 284950528, 0.0, 5546),
+}
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_static_combo_golden_all_backends(backend):
+    """Recorded on the pre-run-native engine (PR 2 tree): the run-native
+    hierarchy + macro-stepper must be execution-invisible for every
+    backend, not just msched."""
+    progs = combo("A", page_size=256 << 10, scale=0.05)
+    foot = sum(p.footprint_bytes() for p in progs)
+    res = simulate(
+        progs, RTX5080, backend, capacity_bytes=int(foot / 1.5),
+        sim_us=100_000.0, policy=RoundRobinPolicy(10_000.0),
+        predictor_kind="oracle",
+    )
+    assert _fingerprint(res)[:6] == _STATIC_GOLDEN[backend]
+
+
+_SERVE_GOLDEN = {
+    "um": (10002034.794667574, 1809, 118019, 123751890944, 0.0, 73),
+    "msched": (1525606.3654503059, 13, 0, 26937917440, 390.0, 145),
+    "ideal": (1525426.3654503212, 13, 0, 26937917440, 0.0, 145),
+    "suv": (10046655.501572613, 107, 0, 247296163840, 0.0, 1),
+}
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_seeded_serving_trace_golden_all_backends(backend):
+    """Same contract through the dynamic lifecycle: the seeded serving trace
+    (template predictor, admission control, task retirement) fingerprints
+    were recorded on the pre-run-native engine."""
+    from repro.serving import (
+        AlwaysAdmit,
+        MSchedAdmission,
+        SLOSpec,
+        poisson_trace,
+        serve_trace,
+    )
+    from repro.serving.lifecycle import ServedRequestTask
+
+    tr = poisson_trace(
+        4.0, 1.5, seed=7, tenants=("qwen3-1.7b",), prompt_mean=128,
+        output_mean=12, max_prompt=256, max_output=24,
+    )
+    probe = ServedRequestTask(999, tr.requests[0], page_size=1 << 20)
+    cap = int(3 * probe.footprint_bytes() / 1.5)
+    adm, q = (
+        (MSchedAdmission(headroom=0.9), 350_000.0)
+        if backend in ("msched", "ideal")
+        else (AlwaysAdmit(), 2_000.0)
+    )
+    rep = serve_trace(
+        tr, RTX5080, backend=backend, capacity_bytes=cap, admission=adm,
+        policy=RoundRobinPolicy(q), page_size=1 << 20,
+        slo=SLOSpec(ttft_us=2e6, tpot_us=50e3),
+    )
+    assert _fingerprint(rep.result)[:6] == _SERVE_GOLDEN[backend]
