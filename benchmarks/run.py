@@ -28,6 +28,7 @@ MODULES = [
     "fig13_rt_be",
     "sim_throughput",
     "serve_oversub",
+    "cluster_oversub",
     "kernels_bench",
     "roofline_report",
 ]

@@ -98,6 +98,10 @@ def restore(ckpt_dir: str, step: int, target: Any) -> Any:
             sharding, jax.sharding.SingleDeviceSharding
         ):
             out.append(jax.device_put(arr, sharding))
+        elif isinstance(leaf, (np.ndarray, np.generic)):
+            # host target: stay on host — device_put would silently downcast
+            # 64-bit leaves while jax_enable_x64 is off
+            out.append(arr)
         else:
             # np.load preserves ml_dtypes (bfloat16 etc.); no cast needed
             out.append(jax.device_put(arr))

@@ -1,0 +1,49 @@
+"""Multi-GPU cluster scheduling on top of the MSched simulator.
+
+The cluster subsystem composes N per-GPU simulation cores
+(:class:`repro.core.simulator.SimCore`) under one event loop:
+
+  * :mod:`~repro.cluster.topology` — GPU fleet, PCIe/NVLink link graph with
+    bandwidth contention, shared host DRAM staging budget;
+  * :mod:`~repro.cluster.placement` — which GPU gets an arriving task
+    (round-robin / least-loaded baselines vs the MSched-aware bin-packer
+    that best-fits predicted working sets against residency headroom);
+  * :mod:`~repro.cluster.migration` — inter-GPU task migration: checkpoint
+    the working set through ``repro.checkpointing``, pay the link-graph
+    transfer, resume on the target;
+  * :mod:`~repro.cluster.aggregate` — merge per-GPU results/records into
+    cluster-wide goodput/TTFT/TPOT;
+  * :mod:`~repro.cluster.engine` — the ``simulate_cluster()`` entrypoint.
+"""
+from repro.cluster.aggregate import (  # noqa: F401
+    RequestStats,
+    merge_request_records,
+    merge_sim_results,
+    peak_concurrent_bytes,
+)
+from repro.cluster.engine import (  # noqa: F401
+    ClusterReport,
+    GPUReport,
+    simulate_cluster,
+)
+from repro.cluster.migration import (  # noqa: F401
+    MigrationEvent,
+    Rebalancer,
+    ResumedTask,
+)
+from repro.cluster.placement import (  # noqa: F401
+    PLACEMENTS,
+    LeastLoadedPlacement,
+    MSchedPlacement,
+    PlacementPolicy,
+    RoundRobinPlacement,
+    make_placement,
+)
+from repro.cluster.topology import (  # noqa: F401
+    ClusterTopology,
+    GPUNode,
+    Link,
+    TransferPlan,
+    homogeneous,
+    mixed,
+)

@@ -1,0 +1,224 @@
+"""Cluster serving engine: N per-GPU simulation cores under one event loop.
+
+``simulate_cluster`` replays a request trace against a
+:class:`~repro.cluster.topology.ClusterTopology`: every GPU is one
+re-entrant :class:`~repro.core.simulator.SimCore` (its own HBM pool, memory
+backend, scheduler, and admission controller), and the cluster loop owns the
+global event stream — trace arrivals, dispatched to a GPU by the placement
+policy the moment they arrive, and periodic rebalance ticks that migrate
+work off pressured devices through the link graph.
+
+The loop is a conservative discrete-event composition: between two global
+events no interaction between GPUs is possible (tasks only meet at
+placement/rebalance decisions), so each core safely advances to the next
+event time on its own (``run(T, final=False)``), and the per-GPU results are
+exact. With a single GPU the composition degenerates to exactly
+``simulate()`` — bit-for-bit, for all four memory backends (pinned in
+tests/cluster/test_cluster_engine.py).
+
+``repro.serving`` is imported lazily: serving builds its per-run scoreboard
+on :mod:`repro.cluster.aggregate`, and the module-level import edge must
+point only that way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.scheduler import Policy, RoundRobinPolicy
+from repro.core.simulator import AdmissionController, SimCore, SimResult
+from repro.cluster.aggregate import (
+    RequestStats,
+    merge_request_records,
+    merge_sim_results,
+    peak_concurrent_bytes,
+)
+from repro.cluster.migration import MigrationEvent, Rebalancer
+from repro.cluster.placement import PlacementPolicy, make_placement
+from repro.cluster.topology import ClusterTopology
+
+
+@dataclasses.dataclass
+class GPUReport:
+    name: str
+    platform: str
+    capacity_bytes: int
+    placed: int  # arrivals dispatched here (migrations land on top)
+    result: SimResult
+
+    def to_row(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "platform": self.platform,
+            "capacity_bytes": self.capacity_bytes,
+            "placed": self.placed,
+            "finished": len(self.result.finished_requests()),
+            "faults": self.result.faults,
+            "migrated_bytes": self.result.migrated_bytes,
+            "switches": self.result.switches,
+        }
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    backend: str
+    placement: str
+    n_gpus: int
+    total_capacity_bytes: int
+    oversubscription: float  # peak admitted demand / total capacity
+    offered_rps: float
+    slo: object  # SLOSpec
+    stats: RequestStats  # cluster-wide, over merged records
+    merged: SimResult
+    per_gpu: List[GPUReport]
+    migrations: List[MigrationEvent]
+    deferred_migrations: int
+
+    def to_row(self) -> Dict[str, object]:
+        row: Dict[str, object] = {
+            "backend": self.backend,
+            "placement": self.placement,
+            "n_gpus": self.n_gpus,
+            "total_capacity_bytes": self.total_capacity_bytes,
+            "oversubscription": self.oversubscription,
+            "offered_rps": self.offered_rps,
+            "ttft_slo_us": self.slo.ttft_us,
+            "tpot_slo_us": self.slo.tpot_us,
+            "migrations": len(self.migrations),
+            "migrated_requests": len(
+                {m.task_id for m in self.migrations}
+            ),
+            "deferred_migrations": self.deferred_migrations,
+            "per_gpu": [g.to_row() for g in self.per_gpu],
+        }
+        row.update(dataclasses.asdict(self.stats))
+        return row
+
+
+def simulate_cluster(
+    trace,
+    topology: ClusterTopology,
+    backend: str = "msched",
+    placement: "PlacementPolicy | str" = "msched",
+    admission_factory: Optional[Callable[[int], AdmissionController]] = None,
+    policy_factory: Optional[Callable[[int], Policy]] = None,
+    page_size: int = 1 << 20,
+    predictor_kind: str = "template",
+    slo=None,
+    sim_us: Optional[float] = None,
+    drain_factor: float = 8.0,
+    rebalance_period_us: Optional[float] = None,
+    rebalance_threshold: float = 0.5,
+    max_moves_per_tick: int = 1,
+    stage_dir: Optional[str] = None,
+    pool: str = "run",
+) -> ClusterReport:
+    """Replay ``trace`` across the cluster and report fleet-level serving
+    quality.
+
+    ``admission_factory`` / ``policy_factory`` build one controller/policy
+    *per GPU* (they are stateful); index ``i`` is the GPU's position in the
+    topology. ``rebalance_period_us`` enables inter-GPU migration at that
+    cadence; ``stage_dir`` routes each checkpointed move through the sharded
+    checkpoint format on disk. Other knobs mirror ``serve_trace``.
+    """
+    # lazy: serving depends on cluster.aggregate at module level; the
+    # reverse edge must not exist at import time
+    from repro.serving.engine import SLOSpec, build_events, representative_requests
+
+    slo = slo or SLOSpec()
+    events = build_events(trace, page_size=page_size)
+    footprints = {
+        ev.program.task_id: ev.program.footprint_bytes() for ev in events
+    }
+    reps = representative_requests(trace, page_size=page_size)
+    placement = make_placement(placement)
+    cores = [
+        SimCore(
+            [],
+            node.platform,
+            backend,
+            capacity_bytes=node.hbm_bytes,
+            policy=policy_factory(i) if policy_factory else RoundRobinPolicy(),
+            predictor_kind=predictor_kind,
+            admission=admission_factory(i) if admission_factory else None,
+            profile_set=reps,
+            page_size=page_size,
+            prepopulate=False,
+            pool=pool,
+            dynamic=True,
+            name=node.name,
+        )
+        for i, node in enumerate(topology.gpus)
+    ]
+    horizon = sim_us or max(1.0, trace.duration_us()) * drain_factor
+    # contention state is per-run: a reused topology must not price this
+    # run's transfers against a previous run's in-flight migrations
+    topology.reset_transfers()
+    rebalancer = (
+        Rebalancer(
+            topology,
+            threshold=rebalance_threshold,
+            max_moves=max_moves_per_tick,
+            stage_dir=stage_dir,
+        )
+        if rebalance_period_us
+        else None
+    )
+    placed = [0] * len(cores)
+
+    # -- the cluster event loop --------------------------------------------
+    ev_i = 0
+    next_tick = rebalance_period_us if rebalancer else float("inf")
+    while True:
+        t_ev = events[ev_i].time_us if ev_i < len(events) else float("inf")
+        t_tick = next_tick if next_tick <= horizon else float("inf")
+        T = min(t_ev, t_tick)
+        if T == float("inf"):
+            break
+        for core in cores:
+            core.run(T, final=False)
+        if t_ev <= t_tick:
+            ev = events[ev_i]
+            ev_i += 1
+            gi = placement.place(ev.program, ev.time_us, cores)
+            cores[gi].inject(ev)
+            placed[gi] += 1
+        else:
+            rebalancer.tick(cores, T)
+            next_tick += rebalance_period_us
+    for core in cores:
+        core.run(horizon, final=True)
+
+    results = [core.result() for core in cores]
+    records = merge_request_records([r.requests for r in results])
+    merged = merge_sim_results(results, records)
+    window_us = max(trace.duration_us(), 1.0)
+    stats = RequestStats.from_records(
+        records, slo.ttft_us, slo.tpot_us, window_us
+    )
+    total_cap = sum(node.hbm_bytes for node in topology.gpus)
+    peak = peak_concurrent_bytes(footprints, records)
+    return ClusterReport(
+        backend=backend,
+        placement=placement.name,
+        n_gpus=len(cores),
+        total_capacity_bytes=total_cap,
+        oversubscription=peak / total_cap if total_cap else 0.0,
+        offered_rps=trace.offered_rate_rps(),
+        slo=slo,
+        stats=stats,
+        merged=merged,
+        per_gpu=[
+            GPUReport(
+                name=node.name,
+                platform=node.platform.name,
+                capacity_bytes=node.hbm_bytes,
+                placed=placed[i],
+                result=results[i],
+            )
+            for i, node in enumerate(topology.gpus)
+        ],
+        migrations=list(rebalancer.events) if rebalancer else [],
+        deferred_migrations=topology.deferred,
+    )

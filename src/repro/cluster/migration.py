@@ -1,0 +1,270 @@
+"""Inter-GPU task migration: checkpoint the working set, price the transfer
+on the link graph, re-admit a continuation on the target GPU.
+
+Migration is iteration-granular: the source core ejects the task between
+scheduler steps (``SimCore.eject``), which snapshots the resident working
+set; work of a partially-completed iteration is replayed on the target. The
+working set travels either peer-to-peer (NVLink edge) or host-staged
+(src → host DRAM → dst), with link contention and the host staging budget
+enforced by :class:`~repro.cluster.topology.ClusterTopology`. On the target,
+the continuation (:class:`ResumedTask`, same task id and address space,
+iteration counter offset past the completed prefix) arrives as a normal
+``TaskArrival`` at the transfer's landing time, with the checkpointed runs
+populated into HBM at admission — the restore half of the move.
+
+When a ``stage_dir`` is given, the working-set manifest actually round-trips
+through ``repro.checkpointing.checkpoint`` (the sharded .npy + msgpack
+format) — the host-staged path writes real files, and the restored manifest
+is what re-admission uses, so checkpoint integrity is on the migration
+path, not asserted on the side.
+
+The cheap rebalance move is *stealing*: a queued-but-unadmitted candidate on
+the pressured GPU has nothing resident, so rerouting it costs nothing but
+the decision. :class:`Rebalancer` always prefers steals and only checkpoints
+running tasks when the wait queue is empty.
+
+Known policy interaction: a migrated continuation queues behind the *target*
+GPU's admission controller like any arrival, so a controller with a wait
+deadline (``MSchedAdmission(max_wait_us=...)``) can reject a
+partially-executed request outright — the record ends rejected with its
+completed prefix banked on the source. A return-to-source / retry protocol
+is an open item (ROADMAP); the shipped benchmarks use deadline-free
+admission, where continuations always eventually admit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.hbm import resident_runs_in
+from repro.core.pages import PageRun, run_page_count
+from repro.core.simulator import (
+    EjectedTask,
+    SimCore,
+    TaskArrival,
+    active_demand_pages,
+)
+from repro.core.workloads import TaskProgram
+from repro.cluster.topology import ClusterTopology
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    """One completed rebalance move, for reporting."""
+
+    time_us: float
+    task_id: int
+    src: str
+    dst: str
+    kind: str  # "steal" (queued candidate) | "checkpoint" (running task)
+    pages: int
+    nbytes: int
+    arrival_us: float  # when the task lands on dst
+    completed_iters: int = 0
+
+
+class ResumedTask(TaskProgram):
+    """Continuation of a migrated task: same task id and address space, with
+    the iteration counter offset past the prefix completed on the source
+    GPU. The inner program is *not* released on the source — its space (and
+    the page-key identity the pools share) travels with it."""
+
+    def __init__(self, inner: TaskProgram, completed: int):
+        # no super().__init__: the continuation adopts the inner program's
+        # address space instead of allocating a fresh one
+        self.inner = inner
+        self.task_id = inner.task_id
+        self.space = inner.space
+        self.name = f"{getattr(inner, 'name', 'task')}+mig{completed}"
+        self.offset = completed
+        total = getattr(inner, "total_iterations", None)
+        self.total_iterations = (
+            None if total is None else max(0, total - completed)
+        )
+
+    def iteration(self, it: int):
+        return self.inner.iteration(it + self.offset)
+
+    def footprint_bytes(self) -> int:
+        return self.inner.footprint_bytes()
+
+    def release(self):
+        return self.inner.release()
+
+
+# --------------------------------------------------------------------------
+# Working-set checkpointing (through repro.checkpointing)
+# --------------------------------------------------------------------------
+
+
+def pack_working_set(ej: EjectedTask, page_size: int) -> Dict[str, np.ndarray]:
+    """The migration manifest as a flat pytree of host arrays — what the
+    host-staged path serializes."""
+    starts = np.asarray([s for s, _ in ej.resident_runs], dtype=np.int64)
+    stops = np.asarray([e for _, e in ej.resident_runs], dtype=np.int64)
+    return {
+        "task_id": np.int64(ej.program.task_id),
+        "completed": np.int64(ej.completed),
+        "page_size": np.int64(page_size),
+        "resident_starts": starts,
+        "resident_stops": stops,
+    }
+
+
+def unpack_working_set(tree: Dict[str, np.ndarray]) -> List[PageRun]:
+    return [
+        (int(s), int(e))
+        for s, e in zip(tree["resident_starts"], tree["resident_stops"])
+    ]
+
+
+def checkpoint_roundtrip(
+    stage_dir: str, seq: int, ej: EjectedTask, page_size: int
+) -> List[PageRun]:
+    """Stage the working-set manifest through the sharded checkpoint format
+    and return the *restored* resident runs (what re-admission warms HBM
+    with). Imported lazily: the simulation path stays jax-free unless a
+    stage dir is configured."""
+    from repro.checkpointing import checkpoint
+
+    tree = pack_working_set(ej, page_size)
+    checkpoint.save(stage_dir, seq, tree, keep=4)
+    n = len(ej.resident_runs)
+    target = {
+        "task_id": np.zeros((), np.int64),
+        "completed": np.zeros((), np.int64),
+        "page_size": np.zeros((), np.int64),
+        "resident_starts": np.zeros((n,), np.int64),
+        "resident_stops": np.zeros((n,), np.int64),
+    }
+    restored = checkpoint.restore(stage_dir, seq, target)
+    if int(restored["task_id"]) != ej.program.task_id:
+        raise RuntimeError(
+            f"checkpoint round-trip mismatch: staged task "
+            f"{int(restored['task_id'])}, expected {ej.program.task_id}"
+        )
+    return unpack_working_set(restored)
+
+
+# --------------------------------------------------------------------------
+# Rebalancer
+# --------------------------------------------------------------------------
+
+
+class Rebalancer:
+    """Periodic load rebalancing across cores.
+
+    Pressure is memory demand relative to capacity — the same per-cycle
+    demand admission and placement price (predicted per-quantum working sets
+    plus the queued backlog). Each tick moves at most ``max_moves`` tasks
+    from the most- to the least-pressured GPU while the gap exceeds
+    ``threshold``; steals (queued candidates) are free, checkpointed moves
+    of running tasks pay the link-graph transfer time and host staging.
+    """
+
+    def __init__(
+        self,
+        topology: ClusterTopology,
+        threshold: float = 0.5,
+        max_moves: int = 1,
+        quantum_us: Optional[float] = None,
+        stage_dir: Optional[str] = None,
+    ):
+        assert threshold > 0
+        self.topology = topology
+        self.threshold = threshold
+        self.max_moves = max_moves
+        self.quantum_us = quantum_us
+        self.stage_dir = stage_dir
+        self.events: List[MigrationEvent] = []
+        self._seq = 0
+
+    def pressure(self, core: SimCore) -> float:
+        st = core.state_view()
+        quantum = self.quantum_us or getattr(st.policy, "quantum_us", 5_000.0)
+        return (active_demand_pages(st, quantum) + st.waiting_pages) / max(
+            1, st.pool.capacity
+        )
+
+    def tick(self, cores: Sequence[SimCore], now: float) -> List[MigrationEvent]:
+        moves: List[MigrationEvent] = []
+        for _ in range(self.max_moves):
+            loads = [self.pressure(c) for c in cores]
+            si = max(range(len(cores)), key=lambda i: loads[i])
+            di = min(range(len(cores)), key=lambda i: loads[i])
+            if si == di or loads[si] - loads[di] < self.threshold:
+                break
+            mv = self._move_one(cores[si], cores[di], now)
+            if mv is None:
+                break
+            moves.append(mv)
+        self.events.extend(moves)
+        return moves
+
+    def _move_one(
+        self, src: SimCore, dst: SimCore, now: float
+    ) -> Optional[MigrationEvent]:
+        stolen = src.steal_waiting()
+        if stolen is not None:
+            ev, rec, warm = stolen
+            # a stolen candidate may itself be a migrated continuation whose
+            # checkpointed working set was still waiting for admission: the
+            # warm runs travel with it (staged in host DRAM either way)
+            dst.inject(
+                TaskArrival(
+                    max(now, ev.time_us),
+                    ev.program,
+                    meta=dict(ev.meta, rerouted_from=src.name),
+                ),
+                warm_runs=warm,
+            )
+            return MigrationEvent(
+                now, ev.program.task_id, src.name, dst.name, "steal",
+                0, 0, max(now, ev.time_us),
+            )
+        tid = self._pick_victim(src)
+        if tid is None:
+            return None
+        # price the transfer before ejecting: a host-DRAM-budget denial must
+        # leave the source untouched (retry next tick)
+        span = src.tasks[tid].prog.space.page_span()
+        resident = resident_runs_in(src.pool, span)
+        nbytes = run_page_count(resident) * src.page_size
+        plan = self.topology.plan_transfer(src.name, dst.name, nbytes, now)
+        if plan is None:
+            return None
+        ej = src.eject(tid, resident_runs=resident)
+        warm = ej.resident_runs
+        if self.stage_dir is not None:
+            warm = checkpoint_roundtrip(
+                self.stage_dir, self._seq, ej, src.page_size
+            )
+            self._seq += 1
+        if ej.record is not None:
+            ej.record.meta["migrated_to"] = dst.name
+        cont = ResumedTask(ej.program, ej.completed)
+        dst.inject(
+            TaskArrival(
+                plan.arrival_us, cont, meta={"migrated_from": src.name}
+            ),
+            warm_runs=warm,
+        )
+        return MigrationEvent(
+            now, tid, src.name, dst.name, "checkpoint",
+            run_page_count(ej.resident_runs), nbytes, plan.arrival_us,
+            completed_iters=ej.completed,
+        )
+
+    def _pick_victim(self, src: SimCore) -> Optional[int]:
+        """Most recently admitted running task (least sunk prefix — the
+        work-stealing heuristic); deterministic tie-break on task id."""
+        best = None
+        for tid in src.tasks:
+            rec = src.rec_by_tid.get(tid)
+            admitted = rec.admitted_us if rec is not None else 0.0
+            key = (admitted if admitted is not None else 0.0, tid)
+            if best is None or key > best[0]:
+                best = (key, tid)
+        return None if best is None else best[1]

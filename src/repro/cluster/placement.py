@@ -1,0 +1,127 @@
+"""Placement policies: which GPU gets an arriving task.
+
+A policy sees the arriving program and the live per-GPU cores (through
+``SimCore.state_view()`` — the same read-only view admission controllers
+get) and returns the index of the chosen GPU. Baselines:
+
+  * ``RoundRobinPlacement`` — arrival order, no load awareness;
+  * ``LeastLoadedPlacement`` — fewest resident-plus-queued tasks (the classic
+    task-count balancer; blind to memory and to device capacity).
+
+``MSchedPlacement`` is the MSched-aware bin-packer: it prices each GPU's
+*per-schedule-cycle HBM demand* from exactly the state the memory manager
+already maintains — every admitted task's predicted per-quantum working set
+(the planner's ``consume_cut``) plus the whole-footprint bound for queued
+candidates — and best-fits the arrival's footprint against the remaining
+residency headroom. When several GPUs fit equally it prefers the one whose
+interconnect lands the working set fastest (``plan_population_runs`` on the
+candidate footprint — meaningful on heterogeneous clusters where swap
+bandwidths differ); when nothing fits it picks the least *relatively*
+overloaded device, which degrades gracefully into capacity-proportional
+balancing.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.migration import plan_population_runs
+from repro.core.simulator import SimState, active_demand_pages
+from repro.core.workloads import TaskProgram, footprint_pages
+
+
+class PlacementPolicy:
+    name = "base"
+
+    def place(
+        self, prog: TaskProgram, arrival_us: float, cores: Sequence
+    ) -> int:
+        """Index of the GPU that receives ``prog``. ``cores`` expose
+        ``state_view() -> SimState`` and ``name``."""
+        raise NotImplementedError
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    name = "roundrobin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def place(self, prog, arrival_us, cores):
+        i = self._next % len(cores)
+        self._next += 1
+        return i
+
+
+class LeastLoadedPlacement(PlacementPolicy):
+    """Fewest tasks on device (active + queued); ties go to the lowest
+    index. Capacity- and memory-blind by design — the baseline the paper-
+    style bin-packer is measured against."""
+
+    name = "leastloaded"
+
+    def place(self, prog, arrival_us, cores):
+        loads = []
+        for i, core in enumerate(cores):
+            st: SimState = core.state_view()
+            loads.append((len(st.active) + st.waiting, i))
+        return min(loads)[1]
+
+
+class MSchedPlacement(PlacementPolicy):
+    """Best-fit by predicted working set against per-GPU residency headroom.
+
+    ``headroom`` mirrors the admission controller's: the fraction of HBM the
+    packed working sets may claim. ``quantum_us`` defaults to each GPU's own
+    scheduler quantum.
+    """
+
+    name = "msched"
+
+    def __init__(
+        self, headroom: float = 0.9, quantum_us: Optional[float] = None
+    ):
+        assert headroom > 0
+        self.headroom = headroom
+        self.quantum_us = quantum_us
+
+    def _demand(self, st: SimState) -> int:
+        quantum = self.quantum_us or getattr(st.policy, "quantum_us", 5_000.0)
+        return active_demand_pages(st, quantum) + st.waiting_pages
+
+    def place(self, prog, arrival_us, cores):
+        fits: List[tuple] = []
+        overloaded: List[tuple] = []
+        for i, core in enumerate(cores):
+            st: SimState = core.state_view()
+            cand = footprint_pages(prog, st.page_size)
+            budget = self.headroom * st.pool.capacity
+            free = budget - self._demand(st)
+            if cand <= free:
+                # tightest feasible fit: filling the snuggest GPU first
+                # preserves the large contiguous headrooms for the large
+                # arrivals that have nowhere else to go (classic best-fit);
+                # ties go to the fastest-landing interconnect
+                land_us = plan_population_runs(
+                    st.platform, [(0, cand)], 0, True, st.page_size
+                ).total_us
+                fits.append((free - cand, land_us, i))
+            else:
+                # relative overload: a 2x-capacity device absorbs twice the
+                # spill before it is as pressured as its smaller sibling
+                overloaded.append(((self._demand(st) + cand) / st.pool.capacity, i))
+        if fits:
+            return min(fits)[2]
+        return min(overloaded)[1]
+
+
+PLACEMENTS = {
+    RoundRobinPlacement.name: RoundRobinPlacement,
+    LeastLoadedPlacement.name: LeastLoadedPlacement,
+    MSchedPlacement.name: MSchedPlacement,
+}
+
+
+def make_placement(name_or_policy) -> PlacementPolicy:
+    if isinstance(name_or_policy, PlacementPolicy):
+        return name_or_policy
+    return PLACEMENTS[name_or_policy]()

@@ -1,0 +1,213 @@
+"""Cluster topology: GPU nodes, the PCIe/NVLink link graph, and the shared
+host DRAM staging budget.
+
+The topology answers one question for the cluster scheduler: *what does it
+cost to move bytes between two GPUs right now?* Every GPU has a host link
+(its PCIe connection, bandwidth taken from the device's ``Platform``); pairs
+of GPUs may additionally have a peer-to-peer NVLink edge. A transfer follows
+the direct edge when one exists, otherwise it stages through host DRAM
+(src → host, then host → dst), charging the staged bytes against the shared
+``host_dram_bytes`` budget for the duration of the transfer.
+
+Link **contention** is modeled fluid-at-start: when a transfer enters a link
+it shares that link's bandwidth equally with every transfer still active on
+it, and the share is fixed for the transfer's lifetime (no re-evaluation as
+sharers come and go). That keeps planning deterministic and O(active
+transfers) while still penalizing migration storms that pile onto one PCIe
+root port — the first-order effect the paper's pipelined-migration analysis
+(§6.3) cares about. The assumptions are documented in EXPERIMENTS.md
+("Cluster topology model").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.hardware import Platform
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUNode:
+    """One device in the cluster. ``capacity_bytes`` overrides the platform's
+    HBM size (benchmarks shrink capacity to hit a target oversubscription
+    without shrinking the workload)."""
+
+    name: str
+    platform: Platform
+    capacity_bytes: Optional[int] = None
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.capacity_bytes or self.platform.hbm_bytes
+
+
+@dataclasses.dataclass
+class Link:
+    """Undirected edge of the link graph. ``kind`` is ``"pcie"`` for
+    GPU↔host edges and ``"nvlink"`` for GPU↔GPU peer edges."""
+
+    a: str
+    b: str
+    gbps: float
+    kind: str = "pcie"
+
+    def key(self) -> FrozenSet[str]:
+        return frozenset((self.a, self.b))
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    """One planned inter-GPU transfer: leg completion times on the chosen
+    path, with the share each leg got of its link."""
+
+    src: str
+    dst: str
+    nbytes: int
+    start_us: float
+    arrival_us: float
+    staged: bool  # True when routed through host DRAM
+    legs: List[Tuple[str, float]]  # (link key as "a<->b", leg end time)
+
+
+HOST = "host"
+
+
+class ClusterTopology:
+    """GPU fleet + link graph + host DRAM budget.
+
+    ``nvlinks`` lists peer edges as ``(gpu_a, gpu_b, gbps)``. Host links are
+    created automatically for every GPU at the platform's PCIe bandwidth
+    (``min(d2h, h2d)`` — the symmetric planning rate)."""
+
+    def __init__(
+        self,
+        gpus: Sequence[GPUNode],
+        host_dram_bytes: int = 512 << 30,
+        nvlinks: Sequence[Tuple[str, str, float]] = (),
+    ):
+        if len({g.name for g in gpus}) != len(gpus):
+            raise ValueError("GPU names must be unique")
+        self.gpus = list(gpus)
+        self.by_name = {g.name: g for g in self.gpus}
+        self.host_dram_bytes = host_dram_bytes
+        self._links: Dict[FrozenSet[str], Link] = {}
+        for g in self.gpus:
+            bw = min(g.platform.d2h_gbps, g.platform.h2d_gbps)
+            self._add(Link(g.name, HOST, bw, "pcie"))
+        for a, b, gbps in nvlinks:
+            if a not in self.by_name or b not in self.by_name:
+                raise ValueError(f"nvlink endpoint not in cluster: {a}<->{b}")
+            self._add(Link(a, b, gbps, "nvlink"))
+        # active-transfer bookkeeping: link key -> [end_us, ...] and the host
+        # staging intervals (start_us, end_us, bytes)
+        self._active: Dict[FrozenSet[str], List[float]] = {}
+        self._staged: List[Tuple[float, float, int]] = []
+        self.transfers: List[TransferPlan] = []
+        self.deferred = 0  # transfers denied by the host DRAM budget
+
+    def _add(self, link: Link) -> None:
+        self._links[link.key()] = link
+
+    # -- queries -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.gpus)
+
+    def link(self, a: str, b: str) -> Optional[Link]:
+        return self._links.get(frozenset((a, b)))
+
+    def path(self, src: str, dst: str) -> List[Link]:
+        """Direct peer edge when present, else host-staged two-hop path."""
+        direct = self.link(src, dst)
+        if direct is not None:
+            return [direct]
+        return [self._links[frozenset((src, HOST))],
+                self._links[frozenset((dst, HOST))]]
+
+    def host_staged_bytes(self, now: float) -> int:
+        """Bytes currently parked in host DRAM by in-flight staged
+        transfers. Drained stagings are pruned in place (time only moves
+        forward within a run), so the scan stays O(in-flight)."""
+        self._staged = [se for se in self._staged if se[1] > now]
+        return sum(b for s, e, b in self._staged if s <= now)
+
+    def reset_transfers(self) -> None:
+        """Clear all transfer bookkeeping (active links, stagings, history,
+        deferral count). ``simulate_cluster`` calls this at the start of a
+        run: contention state is per-run, so one topology can be reused
+        across a policy sweep."""
+        self._active.clear()
+        self._staged.clear()
+        self.transfers.clear()
+        self.deferred = 0
+
+    def _sharers(self, key: FrozenSet[str], at_us: float) -> int:
+        """This transfer plus every transfer still active on the link."""
+        ends = self._active.setdefault(key, [])
+        ends[:] = [e for e in ends if e > at_us]
+        return 1 + len(ends)
+
+    # -- planning ------------------------------------------------------------
+    def plan_transfer(
+        self, src: str, dst: str, nbytes: int, now: float
+    ) -> Optional[TransferPlan]:
+        """Price moving ``nbytes`` from ``src`` to ``dst`` starting at
+        ``now`` and commit the plan to the contention bookkeeping. Returns
+        ``None`` (and counts a deferral) when the transfer would need host
+        staging beyond the DRAM budget — the caller retries at a later
+        rebalance tick, when earlier stagings have drained."""
+        if src == dst:
+            raise ValueError("transfer to self")
+        path = self.path(src, dst)
+        staged = len(path) > 1
+        if staged:
+            in_use = self.host_staged_bytes(now)
+            if in_use + nbytes > self.host_dram_bytes:
+                self.deferred += 1
+                return None
+        t = now
+        legs: List[Tuple[str, float]] = []
+        for link in path:
+            key = link.key()
+            share = self._sharers(key, t)
+            rate = link.gbps * 1e3 / share  # bytes/us
+            t += nbytes / rate
+            self._active[key].append(t)
+            legs.append((f"{link.a}<->{link.b}", t))
+        if staged:
+            self._staged.append((now, t, nbytes))
+        plan = TransferPlan(src, dst, nbytes, now, t, staged, legs)
+        self.transfers.append(plan)
+        return plan
+
+
+def homogeneous(
+    n: int,
+    platform: Platform,
+    capacity_bytes: Optional[int] = None,
+    host_dram_bytes: int = 512 << 30,
+    nvlink_gbps: Optional[float] = None,
+    prefix: str = "gpu",
+) -> ClusterTopology:
+    """N identical GPUs. ``nvlink_gbps`` adds an all-to-all peer mesh."""
+    gpus = [GPUNode(f"{prefix}{i}", platform, capacity_bytes) for i in range(n)]
+    links: List[Tuple[str, str, float]] = []
+    if nvlink_gbps:
+        links = [
+            (gpus[i].name, gpus[j].name, nvlink_gbps)
+            for i in range(n)
+            for j in range(i + 1, n)
+        ]
+    return ClusterTopology(gpus, host_dram_bytes, links)
+
+
+def mixed(
+    nodes: Sequence[Tuple[Platform, Optional[int]]],
+    host_dram_bytes: int = 512 << 30,
+    nvlinks: Sequence[Tuple[str, str, float]] = (),
+    prefix: str = "gpu",
+) -> ClusterTopology:
+    """Heterogeneous cluster from (platform, capacity_override) pairs."""
+    gpus = [
+        GPUNode(f"{prefix}{i}", plat, cap) for i, (plat, cap) in enumerate(nodes)
+    ]
+    return ClusterTopology(gpus, host_dram_bytes, nvlinks)

@@ -56,6 +56,48 @@ RTX3080 = Platform(
     duplex_cap_gbps=39.8,
 )
 
+# Heterogeneous serving-fleet presets: datacenter device classes with 40 GB /
+# 80 GB HBM variants and differing swap bandwidths, so cluster topologies can
+# mix device classes (the fault control-plane cost is the same KMD path the
+# paper measures; the transfer term scales with the interconnect).
+A100_40G = Platform(
+    name="a100_40g",
+    hbm_bytes=40 << 30,
+    page_size=4 << 10,
+    fault_total_us=31.79,
+    fault_transfer_us=2.4,
+    d2h_gbps=24.0,  # PCIe 4.0 x16
+    h2d_gbps=24.0,
+    duplex_cap_gbps=42.0,
+)
+
+A100_80G = Platform(
+    name="a100_80g",
+    hbm_bytes=80 << 30,
+    page_size=4 << 10,
+    fault_total_us=31.79,
+    fault_transfer_us=2.2,
+    d2h_gbps=26.0,  # PCIe 4.0 x16, SXM board power/host path headroom
+    h2d_gbps=26.0,
+    duplex_cap_gbps=46.0,
+)
+
+H100_80G = Platform(
+    name="h100_80g",
+    hbm_bytes=80 << 30,
+    page_size=4 << 10,
+    fault_total_us=31.79,
+    fault_transfer_us=1.2,
+    d2h_gbps=49.0,  # PCIe 5.0 x16
+    h2d_gbps=49.0,
+    duplex_cap_gbps=80.0,
+)
+
+# NVLink peer-to-peer bandwidth (GB/s per direction) for the cluster link
+# graph; GPUs without NVLink reach peers through host-staged PCIe copies.
+NVLINK_A100_GBPS = 300.0
+NVLINK_H100_GBPS = 450.0
+
 # TPU v5e — the deployment target for the framework (roofline §Perf).
 TPU_V5E_PEAK_BF16_FLOPS = 197e12  # per chip
 TPU_V5E_HBM_GBPS = 819.0  # per chip
@@ -73,7 +115,20 @@ TPU_V5E = Platform(
     duplex_cap_gbps=60.0,
 )
 
-PLATFORMS = {p.name: p for p in (RTX5080, RTX3080, TPU_V5E)}
+PLATFORMS = {
+    p.name: p
+    for p in (RTX5080, RTX3080, A100_40G, A100_80G, H100_80G, TPU_V5E)
+}
+
+
+def hbm_variant(platform: Platform, hbm_bytes: int, name: str = "") -> Platform:
+    """Same device class with a different HBM size (e.g. a capacity-binned
+    SKU for a heterogeneous cluster)."""
+    return dataclasses.replace(
+        platform,
+        name=name or f"{platform.name}_{hbm_bytes >> 30}g",
+        hbm_bytes=hbm_bytes,
+    )
 
 
 def fault_bandwidth_gbps(p: Platform) -> float:

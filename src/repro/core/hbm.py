@@ -589,6 +589,23 @@ class HBMPoolPaged:
         return len(freed)
 
 
+def resident_runs_in(pool, span: PageRun) -> List[PageRun]:
+    """Resident sub-runs of ``span`` in ascending page order, computed as the
+    complement of :meth:`missing_runs` so it works on both pool
+    implementations without touching their state. Used by the cluster's
+    inter-GPU migration path to snapshot a task's live working set."""
+    lo, hi = span
+    out: List[PageRun] = []
+    cur = lo
+    for s, e in pool.missing_runs([(lo, hi)]):
+        if s > cur:
+            out.append((cur, s))
+        cur = e
+    if cur < hi:
+        out.append((cur, hi))
+    return out
+
+
 def make_pool(kind: str, capacity_pages: int):
     """``"run"`` (default run-native) or ``"paged"`` (per-page reference)."""
     if kind == "run":

@@ -27,7 +27,7 @@ from repro.core.migration import (
     plan_population_runs,
 )
 from repro.core.opt import OptPlan, PlannedAccess, build_plan
-from repro.core.pages import AddressSpace, run_page_count
+from repro.core.pages import AddressSpace, merge_runs, run_page_count
 from repro.core.planner import compute_cuts, first_access_runs, run_groups
 from repro.core.predictor import Predictor
 from repro.core.timeline import TaskTimeline
@@ -146,6 +146,22 @@ class TaskHelper:
         starting at ``start`` (build_plan's rule: consume while budget > 0)."""
         target = self._prefix[start] + budget_us
         return min(bisect_left(self._prefix, target, lo=start), len(self._future))
+
+
+def predicted_working_set_pages(
+    helper: TaskHelper, quantum_us: float
+) -> int:
+    """Pages the planner predicts the task touches in one scheduling quantum
+    (the same cut ``compute_cuts`` takes at a context switch). Shared by the
+    serving admission controller and the cluster placement bin-packer."""
+    head = helper.head_index()
+    end = helper.consume_cut(head, quantum_us)
+    runs = [
+        run
+        for acc in helper.future_slice(head, end)
+        for run in acc.page_runs()
+    ]
+    return run_page_count(merge_runs(runs))
 
 
 def _page_order(space: AddressSpace, extents) -> List[int]:

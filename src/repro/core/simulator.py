@@ -28,6 +28,14 @@ admitted (optionally gated by an admission controller), run to completion
 (``TaskProgram.total_iterations``), and then retire, tearing down their
 address space and returning their HBM pages. With no events configured the
 engine is bit-for-bit identical to the static simulator.
+
+The engine itself is the *re-entrant* :class:`SimCore`: ``simulate()`` builds
+one core and drives it to the horizon in a single call, while the cluster
+scheduler (``repro.cluster``) composes N cores — one per GPU — under one
+event loop, advancing each with ``run(until_us, final=False)`` between
+cluster events and steering work through the external hooks (``inject`` /
+``eject`` / ``steal_waiting``). A 1-GPU cluster therefore reproduces
+``simulate()`` bit-for-bit (pinned in tests/cluster/test_cluster_engine.py).
 """
 from __future__ import annotations
 
@@ -39,8 +47,12 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 from repro.core.commands import Command
 from repro.core.demand_paging import DemandPager
 from repro.core.hardware import Platform
-from repro.core.hbm import HBMPool, make_pool
-from repro.core.memory_manager import Coordinator, TaskHelper
+from repro.core.hbm import HBMPool, make_pool, resident_runs_in
+from repro.core.memory_manager import (
+    Coordinator,
+    TaskHelper,
+    predicted_working_set_pages,
+)
 from repro.core.migration import IndexReadyView, plan_population_runs
 from repro.core.pages import AddressSpace, PageRun, clip_runs, pages_to_runs, run_page_count
 from repro.core.planner import merged_command_runs
@@ -54,7 +66,7 @@ from repro.core.profiler import profile_programs
 from repro.core.scheduler import Policy, RoundRobinPolicy, SchedTask
 from repro.core.templates import analyze_traces
 from repro.core.timeline import TaskTimeline
-from repro.core.workloads import TaskProgram
+from repro.core.workloads import TaskProgram, footprint_pages
 
 MIN_LOOKAHEAD_ITERS = 2  # async launch window (queued-but-not-executed)
 
@@ -359,7 +371,8 @@ class AdmissionController:
 
 @dataclasses.dataclass
 class SimState:
-    """Read-only view handed to admission controllers."""
+    """Read-only view handed to admission controllers (and, via
+    :meth:`SimCore.state_view`, to cluster placement policies)."""
 
     now: float
     platform: Platform
@@ -369,11 +382,55 @@ class SimState:
     active: Dict[int, TaskProgram]
     helpers: Dict[int, TaskHelper]
     waiting: int  # queued-but-not-admitted candidates (FIFO ahead included)
+    waiting_pages: int = 0  # summed whole-footprint pages of that queue
+
+
+def active_demand_pages(state: SimState, quantum_us: float) -> int:
+    """Per-schedule-cycle HBM demand of the admitted population: every active
+    task runs once per round-robin cycle, so the cycle demand is the sum of
+    the predicted per-quantum working sets — the whole footprint for tasks
+    without a helper (UM-style backends) or with an empty future (the
+    conservative bound). Shared by admission control and cluster placement."""
+    total = 0
+    for tid, prog in state.active.items():
+        helper = state.helpers.get(tid)
+        if helper is not None and len(helper):
+            total += predicted_working_set_pages(helper, quantum_us)
+        else:
+            total += footprint_pages(prog, state.page_size)
+    return total
+
+
+@dataclasses.dataclass
+class EjectedTask:
+    """A task forcibly removed mid-run for inter-GPU migration: the program
+    (address space intact — *not* released), its completed-iteration count,
+    and the working set that was resident when it was ejected. The cluster
+    checkpoints the working set, prices the transfer on the link graph, and
+    re-injects a continuation on the target GPU."""
+
+    program: TaskProgram
+    completed: int
+    resident_runs: List[PageRun]
+    record: Optional[RequestRecord]
+
+    def working_set_pages(self) -> int:
+        return run_page_count(self.resident_runs)
 
 
 # --------------------------------------------------------------------------
 # Engine
 # --------------------------------------------------------------------------
+
+
+def percentile(sorted_xs: Sequence[float], pct: float) -> float:
+    """The repo-wide percentile convention (index = floor(pct/100 * n),
+    clamped) over an already-sorted sample list. ``SimResult`` and the
+    cluster aggregation layer both delegate here, so the convention cannot
+    drift between per-run and fleet-level metrics."""
+    if not sorted_xs:
+        return 0.0
+    return sorted_xs[min(len(sorted_xs) - 1, int(pct / 100.0 * len(sorted_xs)))]
 
 
 @dataclasses.dataclass
@@ -402,6 +459,9 @@ class SimResult:
         return sum(t.completions for t in self.per_task.values())
 
     # -- serving / SLO metrics ----------------------------------------------
+    # percentile convention: index = floor(pct/100 * n), clamped (see
+    # module-level :func:`percentile` — the single implementation every
+    # aggregation layer shares)
     def finished_requests(self) -> List[RequestRecord]:
         return [r for r in self.requests if r.finished_us is not None]
 
@@ -415,10 +475,7 @@ class SimResult:
         return [v for r in self.requests if (v := fn(r)) is not None]
 
     def request_percentile_us(self, metric: str, pct: float) -> float:
-        xs = sorted(self.request_metric_us(metric))
-        if not xs:
-            return 0.0
-        return xs[min(len(xs) - 1, int(pct / 100.0 * len(xs)))]
+        return percentile(sorted(self.request_metric_us(metric)), pct)
 
     def goodput_per_s(
         self,
@@ -454,9 +511,7 @@ class SimResult:
             xs = sorted(
                 x for t in self.per_task.values() for x in t.latencies_us
             )
-        if not xs:
-            return 0.0
-        return xs[min(len(xs) - 1, int(pct / 100.0 * len(xs)))]
+        return percentile(xs, pct)
 
     def p50_latency_us(self, task_id: Optional[int] = None) -> float:
         return self.latency_percentile_us(50.0, task_id)
@@ -606,165 +661,316 @@ def make_backend(
     return backend, helpers
 
 
-def simulate(
-    programs: Sequence[TaskProgram],
-    platform: Platform,
-    backend_name: str = "msched",
-    capacity_bytes: Optional[int] = None,
-    sim_us: float = 2_000_000.0,
-    policy: Optional[Policy] = None,
-    predictor_kind: str = "template",
-    pipelined: bool = True,
-    arrivals: Optional[Dict[int, List[float]]] = None,
-    priorities: Optional[Dict[int, int]] = None,
-    prepopulate: bool = True,
-    planning: str = "incremental",
-    task_events: Optional[Sequence[TaskArrival]] = None,
-    admission: Optional[AdmissionController] = None,
-    profile_set: Optional[Sequence[TaskProgram]] = None,
-    page_size: int = 0,
-    pool: str = "run",
-) -> SimResult:
-    if not page_size:
-        if programs:
-            page_size = programs[0].space.page_size
-        elif task_events:
-            page_size = task_events[0].program.space.page_size
-        else:
-            page_size = 4096
-    all_progs = list(programs) + [ev.program for ev in task_events or ()]
-    for prog in all_progs:
-        if prog.space.page_size != page_size:
-            raise ValueError(
-                f"task {prog.task_id} uses page_size "
-                f"{prog.space.page_size}, simulation uses {page_size}; "
-                "pool residency keys would not be comparable"
-            )
-    cap_bytes = capacity_bytes or platform.hbm_bytes
-    pool = make_pool(pool, max(1, cap_bytes // page_size))
-    backend, helpers = make_backend(
-        backend_name, platform, pool, programs, predictor_kind, pipelined,
-        page_size, planning, profile_set,
-    )
-    cached_decode = planning != "legacy"
-    policy = policy or RoundRobinPolicy()
+class SimCore:
+    """Re-entrant single-GPU simulation core.
 
-    quantum = getattr(policy, "quantum_us", 5_000.0)
-    tasks: Dict[int, _RunTask] = {}
-    for prog in programs:
-        rt = _RunTask(prog, helpers.get(prog.task_id), lookahead_us=2.2 * quantum)
-        if arrivals and prog.task_id in arrivals:
-            rt.arrivals = deque(arrivals[prog.task_id])
-            rt.current_arrival = None
-        tasks[prog.task_id] = rt
-        pool.register_task(prog.task_id, prog.space.page_span())
+    Construction performs everything ``simulate()`` used to do before its
+    event loop (pool/backend/helper setup, warm start, degenerate-task purge);
+    :meth:`run` advances the clock. The classic entrypoint drives one core to
+    the horizon in a single ``run(sim_us, final=True)`` call; the cluster
+    scheduler interleaves ``run(T, final=False)`` calls with the external
+    hooks:
 
-    # warm start: fill HBM fairly (tasks ran before the measuring window).
-    # migrate_runs over a fresh pool appends the exact page order the old
-    # per-page populate loop produced, at O(runs)
-    if prepopulate:
-        share = pool.capacity // max(1, len(programs))
+      * :meth:`inject` — enqueue a future :class:`TaskArrival` (placement
+        dispatches trace requests to the chosen GPU), optionally with
+        ``warm_runs`` — the migrated working set that lands in HBM with the
+        task (checkpoint restore);
+      * :meth:`eject` — remove an admitted task mid-run *without* retiring it,
+        returning its program and resident working set for migration;
+      * :meth:`steal_waiting` — pop the newest queued-but-unadmitted
+        candidate for rerouting to another GPU (nothing resident: free);
+      * :meth:`state_view` — the same read-only :class:`SimState` admission
+        controllers get, for load-aware placement.
+
+    ``final=False`` clamps idle clock jumps to ``until_us`` and never
+    force-admits a starved wait queue, so events injected at or after the
+    horizon are always observed in time; the single terminal
+    ``run(horizon, final=True)`` restores ``simulate()``'s end-of-run
+    semantics exactly, which is what makes a 1-GPU cluster bit-for-bit
+    identical to ``simulate()``.
+    """
+
+    def __init__(
+        self,
+        programs: Sequence[TaskProgram],
+        platform: Platform,
+        backend_name: str = "msched",
+        capacity_bytes: Optional[int] = None,
+        policy: Optional[Policy] = None,
+        predictor_kind: str = "template",
+        pipelined: bool = True,
+        arrivals: Optional[Dict[int, List[float]]] = None,
+        priorities: Optional[Dict[int, int]] = None,
+        prepopulate: bool = True,
+        planning: str = "incremental",
+        task_events: Optional[Sequence[TaskArrival]] = None,
+        admission: Optional[AdmissionController] = None,
+        profile_set: Optional[Sequence[TaskProgram]] = None,
+        page_size: int = 0,
+        pool: str = "run",
+        dynamic: Optional[bool] = None,
+        name: str = "gpu0",
+    ):
+        programs = list(programs)
+        if not page_size:
+            if programs:
+                page_size = programs[0].space.page_size
+            elif task_events:
+                page_size = task_events[0].program.space.page_size
+            else:
+                page_size = 4096
+        all_progs = programs + [ev.program for ev in task_events or ()]
+        for prog in all_progs:
+            if prog.space.page_size != page_size:
+                raise ValueError(
+                    f"task {prog.task_id} uses page_size "
+                    f"{prog.space.page_size}, simulation uses {page_size}; "
+                    "pool residency keys would not be comparable"
+                )
+        cap_bytes = capacity_bytes or platform.hbm_bytes
+        self.name = name
+        self.platform = platform
+        self.page_size = page_size
+        self.pool = make_pool(pool, max(1, cap_bytes // page_size))
+        self.backend, self.helpers = make_backend(
+            backend_name, platform, self.pool, programs, predictor_kind,
+            pipelined, page_size, planning, profile_set,
+        )
+        self.cached_decode = planning != "legacy"
+        self.policy = policy or RoundRobinPolicy()
+        self.admission = admission
+        self.priorities = priorities
+        self.quantum = getattr(self.policy, "quantum_us", 5_000.0)
+
+        self.tasks: Dict[int, _RunTask] = {}
         for prog in programs:
-            pool.migrate_runs(clip_runs(_task_footprint_runs(prog), share))
+            rt = _RunTask(
+                prog, self.helpers.get(prog.task_id),
+                lookahead_us=2.2 * self.quantum,
+            )
+            if arrivals and prog.task_id in arrivals:
+                rt.arrivals = deque(arrivals[prog.task_id])
+                rt.current_arrival = None
+            self.tasks[prog.task_id] = rt
+            self.pool.register_task(prog.task_id, prog.space.page_span())
 
-    # -- dynamic lifecycle state --------------------------------------------
-    dynamic = bool(task_events)
-    pending: Deque[TaskArrival] = deque(
-        sorted(task_events or [], key=lambda e: e.time_us)
-    )
-    waiting: Deque[Tuple[TaskArrival, RequestRecord]] = deque()
-    records: List[RequestRecord] = []
-    rec_by_tid: Dict[int, RequestRecord] = {}
-    retired_stats: Dict[int, TaskStats] = {}
-    used_task_ids = set(tasks)  # static ids + every id ever admitted
+        # warm start: fill HBM fairly (tasks ran before the measuring window).
+        # migrate_runs over a fresh pool appends the exact page order the old
+        # per-page populate loop produced, at O(runs)
+        if prepopulate:
+            share = self.pool.capacity // max(1, len(programs))
+            for prog in programs:
+                self.pool.migrate_runs(clip_runs(_task_footprint_runs(prog), share))
 
-    def _sim_state(now: float) -> SimState:
-        return SimState(
-            now=now,
-            platform=platform,
-            pool=pool,
-            policy=policy,
-            page_size=page_size,
-            active={tid: r.prog for tid, r in tasks.items()},
-            helpers=helpers,
-            waiting=len(waiting),
+        # -- dynamic lifecycle state ----------------------------------------
+        self.dynamic = bool(task_events) if dynamic is None else bool(dynamic)
+        self.pending: Deque[TaskArrival] = deque(
+            sorted(task_events or [], key=lambda e: e.time_us)
+        )
+        self.waiting: Deque[Tuple[TaskArrival, RequestRecord, int]] = deque()
+        self._waiting_pages = 0
+        self.records: List[RequestRecord] = []
+        self.rec_by_tid: Dict[int, RequestRecord] = {}
+        self.retired_stats: Dict[int, TaskStats] = {}
+        self.used_task_ids = set(self.tasks)  # static ids + every id admitted
+        self._warm_runs: Dict[int, List[PageRun]] = {}
+
+        self.t = 0.0
+        self.switches = 0
+        self.control_us = 0.0
+        self.sched_cache: Optional[Dict[int, SchedTask]] = None
+
+        # purge degenerate zero-iteration static programs before the clock
+        # starts
+        for tid in [tid for tid, rt in self.tasks.items() if rt.finished()]:
+            self._retire(tid, 0.0)
+
+    # -- external hooks (cluster composition) -------------------------------
+    def state_view(self) -> SimState:
+        return self._state(self.t)
+
+    def inject(
+        self, ev: TaskArrival, warm_runs: Optional[Sequence[PageRun]] = None
+    ) -> None:
+        """Enqueue a future arrival. ``warm_runs`` (a migrated task's
+        checkpointed working set) is populated into HBM at admission — the
+        restore half of the transfer the cluster already priced."""
+        self.dynamic = True
+        if self.pending and ev.time_us < self.pending[-1].time_us:
+            self.pending = deque(
+                sorted([*self.pending, ev], key=lambda e: e.time_us)
+            )
+        else:
+            self.pending.append(ev)
+        if warm_runs:
+            self._warm_runs[ev.program.task_id] = list(warm_runs)
+
+    def eject(
+        self,
+        task_id: int,
+        resident_runs: Optional[List[PageRun]] = None,
+    ) -> EjectedTask:
+        """Forcibly remove an admitted task for migration: scheduler state,
+        helper, and resident pages are torn down on this GPU, but the program
+        is *not* released and its record is *not* marked finished. Work of a
+        partially-completed iteration is replayed on the target (checkpoints
+        are iteration-granular). ``resident_runs`` lets a caller that already
+        snapshotted the working set (to price the transfer before committing
+        to the move) pass it through instead of recomputing it — it must be
+        current, i.e. no pool mutation since the snapshot."""
+        rt = self.tasks.pop(task_id)
+        self.sched_cache = None
+        self.backend.retire_task(task_id)
+        self.helpers.pop(task_id, None)
+        # the id may legitimately come back: a rebalanced task can ping-pong
+        # onto a GPU it already visited (each visit is its own record
+        # fragment; the cluster merge stitches them)
+        self.used_task_ids.discard(task_id)
+        span = rt.prog.space.page_span()
+        resident = (
+            resident_runs
+            if resident_runs is not None
+            else resident_runs_in(self.pool, span)
+        )
+        self.pool.register_task(task_id, span)  # cover late allocations
+        self.pool.free_task(task_id)
+        self._bank_stats(task_id, rt.stats)
+        rec = self.rec_by_tid.get(task_id)
+        if rec is not None:
+            rec.iterations_done = rt.stats.completions
+            rec.meta["ejected_us"] = self.t
+        return EjectedTask(
+            program=rt.prog,
+            completed=rt.stats.completions,
+            resident_runs=resident,
+            record=rec,
         )
 
-    def _admit(ev: TaskArrival, rec: RequestRecord, now: float) -> None:
-        nonlocal sched_cache
-        sched_cache = None
+    def steal_waiting(
+        self,
+    ) -> Optional[Tuple[TaskArrival, RequestRecord, Optional[List[PageRun]]]]:
+        """Pop the *newest* queued-but-unadmitted candidate (LIFO steal keeps
+        FIFO fairness for the queue head) so the cluster can reroute it to a
+        less-loaded GPU. Its record stays in this core's log (the cluster
+        merge combines it with the target GPU's). The third element is the
+        candidate's pending warm working set, if it was itself a migrated
+        continuation still waiting for admission — it travels with the
+        steal instead of going stale here."""
+        if not self.waiting:
+            return None
+        ev, rec, pages = self.waiting.pop()
+        self._waiting_pages -= pages
+        rec.meta["rerouted_us"] = self.t
+        return ev, rec, self._warm_runs.pop(ev.program.task_id, None)
+
+    # -- lifecycle internals -------------------------------------------------
+    def _state(self, now: float) -> SimState:
+        return SimState(
+            now=now,
+            platform=self.platform,
+            pool=self.pool,
+            policy=self.policy,
+            page_size=self.page_size,
+            active={tid: r.prog for tid, r in self.tasks.items()},
+            helpers=self.helpers,
+            waiting=len(self.waiting),
+            waiting_pages=self._waiting_pages,
+        )
+
+    def _admit(self, ev: TaskArrival, rec: RequestRecord, now: float) -> None:
+        self.sched_cache = None
         prog = ev.program
-        if prog.task_id in used_task_ids:
+        if prog.task_id in self.used_task_ids:
             raise ValueError(
                 f"TaskArrival task_id {prog.task_id} collides with an "
                 "existing task; ids must be unique across programs and events"
             )
-        used_task_ids.add(prog.task_id)
-        helper = backend.admit_task(prog)
+        self.used_task_ids.add(prog.task_id)
+        helper = self.backend.admit_task(prog)
         if helper is not None:
-            helpers[prog.task_id] = helper
-        rt = _RunTask(prog, helper, lookahead_us=2.2 * quantum)
-        tasks[prog.task_id] = rt
-        pool.register_task(prog.task_id, prog.space.page_span())
+            self.helpers[prog.task_id] = helper
+        rt = _RunTask(prog, helper, lookahead_us=2.2 * self.quantum)
+        self.tasks[prog.task_id] = rt
+        self.pool.register_task(prog.task_id, prog.space.page_span())
+        warm = self._warm_runs.pop(prog.task_id, None)
+        if warm:
+            self.pool.migrate_runs(clip_runs(warm, self.pool.capacity))
         rec.admitted_us = now
         if rt.finished():
             # degenerate zero-iteration program: it can never produce the
             # completion event that triggers retirement, so retire it here
-            _retire(prog.task_id, now)
+            self._retire(prog.task_id, now)
 
-    def _retire(tid: int, now: float) -> None:
-        nonlocal sched_cache
-        sched_cache = None
-        rt = tasks.pop(tid)
-        backend.retire_task(tid)
-        helpers.pop(tid, None)
+    def _bank_stats(self, tid: int, stats: TaskStats) -> None:
+        """Accumulate a departing task's stats. A rebalanced task can visit
+        this GPU more than once (eject, then ping-pong back); each visit's
+        work must add up, not overwrite."""
+        cur = self.retired_stats.get(tid)
+        if cur is None:
+            self.retired_stats[tid] = stats
+        else:
+            cur.completions += stats.completions
+            cur.commands += stats.commands
+            cur.busy_us += stats.busy_us
+            cur.latencies_us.extend(stats.latencies_us)
+
+    def _retire(self, tid: int, now: float) -> None:
+        self.sched_cache = None
+        rt = self.tasks.pop(tid)
+        self.backend.retire_task(tid)
+        self.helpers.pop(tid, None)
         # final span (covers any post-admission allocations), then reclaim
         span = rt.prog.release()
-        pool.register_task(tid, span)
-        pool.free_task(tid)
-        retired_stats[tid] = rt.stats
-        rec = rec_by_tid.get(tid)
+        self.pool.register_task(tid, span)
+        self.pool.free_task(tid)
+        self._bank_stats(tid, rt.stats)
+        rec = self.rec_by_tid.get(tid)
         if rec is not None:
             rec.finished_us = now
             rec.iterations_done = rt.stats.completions
 
-    def _drain_waiting(now: float) -> None:
+    def _drain_waiting(self, now: float) -> None:
         # FIFO re-evaluation of the wait queue: stop at the first candidate
         # the controller still holds back (no overtaking)
-        while waiting:
-            ev, rec = waiting[0]
+        while self.waiting:
+            ev, rec, pages = self.waiting[0]
             verdict = (
-                admission.decide(ev.program, ev.time_us, _sim_state(now))
-                if admission is not None
+                self.admission.decide(ev.program, ev.time_us, self._state(now))
+                if self.admission is not None
                 else "admit"
             )
             if verdict == "admit":
-                waiting.popleft()
-                _admit(ev, rec, now)
+                self.waiting.popleft()
+                self._waiting_pages -= pages
+                self._admit(ev, rec, now)
             elif verdict == "reject":
-                waiting.popleft()
+                self.waiting.popleft()
+                self._waiting_pages -= pages
+                self._warm_runs.pop(ev.program.task_id, None)
                 rec.rejected = True
             else:
                 break
 
-    def _process_arrivals(now: float) -> None:
+    def _process_arrivals(self, now: float) -> None:
         # due arrivals join the wait queue in arrival order; one FIFO drain
         # then decides everyone (no overtaking: the drain stops at the first
         # candidate the controller holds back)
-        while pending and pending[0].time_us <= now:
-            ev = pending.popleft()
+        while self.pending and self.pending[0].time_us <= now:
+            ev = self.pending.popleft()
             rec = RequestRecord(
                 ev.program.task_id,
                 ev.time_us,
                 total_iterations=getattr(ev.program, "total_iterations", None),
                 meta=dict(ev.meta),
             )
-            records.append(rec)
-            rec_by_tid[ev.program.task_id] = rec
-            waiting.append((ev, rec))
-        _drain_waiting(now)
+            self.records.append(rec)
+            self.rec_by_tid[ev.program.task_id] = rec
+            pages = footprint_pages(ev.program, self.page_size)
+            self.waiting.append((ev, rec, pages))
+            self._waiting_pages += pages
+        self._drain_waiting(now)
 
-    def _complete(tid: int, rt: _RunTask, now: float) -> bool:
+    def _complete(self, tid: int, rt: _RunTask, now: float) -> bool:
         """Post-iteration bookkeeping shared by the per-command and macro
         paths; returns True when the task finished and retired (end the
         timeslice)."""
@@ -772,79 +978,94 @@ def simulate(
             rt.stats.latencies_us.append(now - rt.current_arrival)
             rt.current_arrival = None
             # next pending arrival (if already due) picked up by runnable()
-        if dynamic:
-            rec = rec_by_tid.get(tid)
+        if self.dynamic:
+            rec = self.rec_by_tid.get(tid)
             if rec is not None and rt.stats.completions == 1:
                 rec.first_iter_us = now
         if rt.finished():
             # finite programs retire regardless of how they entered —
             # a drained static task must not pin the scheduler forever
-            _retire(tid, now)
-            if dynamic:
-                _process_arrivals(now)  # freed pages may unblock the queue
+            self._retire(tid, now)
+            if self.dynamic:
+                self._process_arrivals(now)  # freed pages may unblock queue
             return True
         return False
 
-    # purge degenerate zero-iteration static programs before the clock starts
-    for tid in [tid for tid, rt in tasks.items() if rt.finished()]:
-        _retire(tid, 0.0)
+    # -- the event loop ------------------------------------------------------
+    def run(self, until_us: float, final: bool = True) -> float:
+        """Advance the clock to ``until_us`` (a timeslice in flight may
+        overrun it, exactly as ``simulate()`` overruns its horizon). Returns
+        the clock. Non-final runs stop — without consuming time — when the
+        core has nothing to do before the horizon."""
+        while self.t < until_us:
+            if not self._step(until_us, final):
+                break
+        return self.t
 
-    t = 0.0
-    switches = 0
-    control_us = 0.0
-    sched_cache: Optional[Dict[int, SchedTask]] = None
-    while t < sim_us:
-        if dynamic:
-            _process_arrivals(t)
-        if sched_cache is not None:
-            sched = sched_cache
+    def _step(self, until_us: float, final: bool) -> bool:
+        t = self.t
+        if self.dynamic:
+            self._process_arrivals(t)
+        if self.sched_cache is not None:
+            sched = self.sched_cache
         else:
             sched = {
                 tid: SchedTask(
                     tid,
-                    priority=(priorities or {}).get(tid, 0),
+                    priority=(self.priorities or {}).get(tid, 0),
                     runnable=rt.runnable(t),
                 )
-                for tid, rt in tasks.items()
+                for tid, rt in self.tasks.items()
             }
             # runnable-ness only changes with the clock in RT-arrivals mode;
             # otherwise the view is invalidated solely by admit/retire, so it
             # can be reused across the (possibly hundreds of thousands of)
             # switches of a long serving trace
-            if all(rt.arrivals is None for rt in tasks.values()):
-                sched_cache = sched
-        entry = policy.next_entry(sched)
+            if all(rt.arrivals is None for rt in self.tasks.values()):
+                self.sched_cache = sched
+        entry = self.policy.next_entry(sched)
         if entry is None:
             # idle until the next RT arrival or task-arrival event
-            nxt = [rt.next_arrival() for rt in tasks.values()]
+            nxt = [rt.next_arrival() for rt in self.tasks.values()]
             nxt = [x for x in nxt if x is not None]
-            if pending:
-                nxt.append(pending[0].time_us)
+            if self.pending:
+                nxt.append(self.pending[0].time_us)
             if nxt:
-                t = max(t, min(nxt))
-                continue
-            if waiting:
+                target = min(nxt)
+                if not final:
+                    # never leap past the cluster event horizon: an arrival
+                    # injected there must still be observed in time
+                    target = min(target, until_us)
+                self.t = max(t, target)
+                return True
+            if self.waiting:
+                if not final:
+                    # the cluster may still inject or steal work; starved-
+                    # queue force-admission belongs to the terminal drain
+                    return False
                 # nothing running and nothing due: force-admit the queue head
                 # (an idle device can always take work) to guarantee progress
-                ev, rec = waiting.popleft()
-                _admit(ev, rec, t)
-                continue
-            break
+                ev, rec, pages = self.waiting.popleft()
+                self._waiting_pages -= pages
+                self._admit(ev, rec, t)
+                return True
+            return False
         # the timeline's first entry must be the task about to run —
         # next_entry() already rotated the policy's run queue past it.
         # Backends that never read the plan (um/suv) skip the multi-entry
         # build: at 2 ms TSG quanta over hundreds of serving tasks it is
         # pure overhead
+        backend = self.backend
         if backend.uses_timeline:
-            timeline = TaskTimeline([entry] + policy.timeline(sched).entries)
+            timeline = TaskTimeline([entry] + self.policy.timeline(sched).entries)
         else:
             timeline = TaskTimeline([entry])
         ctrl, ready = backend.on_switch(entry.task_id, timeline, t)
         t += ctrl
-        control_us += ctrl
-        switches += 1
+        self.control_us += ctrl
+        self.switches += 1
 
-        rt = tasks[entry.task_id]
+        rt = self.tasks[entry.task_id]
         if not rt.queue:
             # only reachable when iteration() returns no commands: fail loud
             # instead of spinning the scheduler at zero simulated time
@@ -855,6 +1076,8 @@ def simulate(
         budget = entry.timeslice_us
         space = rt.prog.space
         tid = entry.task_id
+        pool = self.pool
+        cached_decode = self.cached_decode
         ready_max = ready.global_max if ready is not None else None
         # macro-stepping: once migration has landed (past the last ready
         # time), check the upcoming command window's merged working set once;
@@ -894,7 +1117,7 @@ def simulate(
                         budget -= end - t
                         t = end
                         window -= 1
-                        if rt.advance(t) and _complete(tid, rt, t):
+                        if rt.advance(t) and self._complete(tid, rt, t):
                             ended = True
                             break
                     if ended:
@@ -921,22 +1144,79 @@ def simulate(
             rt.stats.busy_us += end - t
             budget -= end - t
             t = end
-            if rt.advance(t) and _complete(tid, rt, t):
+            if rt.advance(t) and self._complete(tid, rt, t):
                 break
+        self.t = t
+        return True
 
-    per_task = {tid: rt.stats for tid, rt in tasks.items()}
-    per_task.update(retired_stats)
-    return SimResult(
-        sim_us=t,
-        per_task=per_task,
-        faults=backend.faults(),
-        migrated_bytes=backend.migrated_pages() * page_size,
-        switches=switches,
-        control_us=control_us,
-        requests=records,
-        hbm_used_pages=pool.used,
-        hbm_freed_pages=pool.freed_pages,
+    def result(self) -> SimResult:
+        per_task = {tid: rt.stats for tid, rt in self.tasks.items()}
+        for tid, banked in self.retired_stats.items():
+            live = per_task.get(tid)
+            if live is None:
+                per_task[tid] = banked
+            else:
+                # a previously-ejected task is back and still running at the
+                # horizon: both visits' work counts (fresh copy — result()
+                # must not mutate live state)
+                per_task[tid] = TaskStats(
+                    banked.completions + live.completions,
+                    banked.commands + live.commands,
+                    banked.busy_us + live.busy_us,
+                    banked.latencies_us + live.latencies_us,
+                )
+        return SimResult(
+            sim_us=self.t,
+            per_task=per_task,
+            faults=self.backend.faults(),
+            migrated_bytes=self.backend.migrated_pages() * self.page_size,
+            switches=self.switches,
+            control_us=self.control_us,
+            requests=self.records,
+            hbm_used_pages=self.pool.used,
+            hbm_freed_pages=self.pool.freed_pages,
+        )
+
+
+def simulate(
+    programs: Sequence[TaskProgram],
+    platform: Platform,
+    backend_name: str = "msched",
+    capacity_bytes: Optional[int] = None,
+    sim_us: float = 2_000_000.0,
+    policy: Optional[Policy] = None,
+    predictor_kind: str = "template",
+    pipelined: bool = True,
+    arrivals: Optional[Dict[int, List[float]]] = None,
+    priorities: Optional[Dict[int, int]] = None,
+    prepopulate: bool = True,
+    planning: str = "incremental",
+    task_events: Optional[Sequence[TaskArrival]] = None,
+    admission: Optional[AdmissionController] = None,
+    profile_set: Optional[Sequence[TaskProgram]] = None,
+    page_size: int = 0,
+    pool: str = "run",
+) -> SimResult:
+    core = SimCore(
+        programs,
+        platform,
+        backend_name,
+        capacity_bytes=capacity_bytes,
+        policy=policy,
+        predictor_kind=predictor_kind,
+        pipelined=pipelined,
+        arrivals=arrivals,
+        priorities=priorities,
+        prepopulate=prepopulate,
+        planning=planning,
+        task_events=task_events,
+        admission=admission,
+        profile_set=profile_set,
+        page_size=page_size,
+        pool=pool,
     )
+    core.run(sim_us, final=True)
+    return core.result()
 
 
 def _true_page_order(space: AddressSpace, cmd: Command) -> List[int]:

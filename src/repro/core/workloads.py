@@ -69,6 +69,15 @@ class TaskProgram:
         return self.space.release()
 
 
+def footprint_pages(prog: TaskProgram, page_size: int) -> int:
+    """Whole-footprint page count — the conservative demand bound admission
+    and placement use for tasks that have no predictor helper yet."""
+    return sum(
+        (b.size + page_size - 1) // page_size
+        for b in prog.space.buffers.values()
+    )
+
+
 # --------------------------------------------------------------------------
 # §7.1 microbenchmarks
 # --------------------------------------------------------------------------

@@ -20,32 +20,17 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-from repro.core.memory_manager import TaskHelper
-from repro.core.pages import merge_runs, run_page_count
-from repro.core.simulator import AdmissionController, SimState
-from repro.core.workloads import TaskProgram
-
-
-def predicted_working_set_pages(
-    helper: TaskHelper, quantum_us: float
-) -> int:
-    """Pages the planner predicts the task touches in one scheduling quantum
-    (the same cut ``compute_cuts`` takes at a context switch)."""
-    head = helper.head_index()
-    end = helper.consume_cut(head, quantum_us)
-    runs = [
-        run
-        for acc in helper.future_slice(head, end)
-        for run in acc.page_runs()
-    ]
-    return run_page_count(merge_runs(runs))
-
-
-def footprint_pages(prog: TaskProgram, page_size: int) -> int:
-    return sum(
-        (b.size + page_size - 1) // page_size
-        for b in prog.space.buffers.values()
-    )
+# predicted_working_set_pages / footprint_pages / active_demand_pages moved
+# into core (repro.core.memory_manager / workloads / simulator) so the
+# cluster placement bin-packer can share them; re-exported here for
+# backwards compatibility.
+from repro.core.memory_manager import predicted_working_set_pages  # noqa: F401
+from repro.core.simulator import (
+    AdmissionController,
+    SimState,
+    active_demand_pages,
+)
+from repro.core.workloads import TaskProgram, footprint_pages  # noqa: F401
 
 
 class AlwaysAdmit(AdmissionController):
@@ -85,17 +70,9 @@ class MSchedAdmission(AdmissionController):
     def _demand_pages(self, state: SimState, quantum_us: float) -> int:
         """Per-cycle HBM demand: every active task runs once per round-robin
         cycle of the scheduler timeline, so the cycle demand is the sum of
-        the predicted per-quantum working sets of all admitted tasks."""
-        total = 0
-        for tid, prog in state.active.items():
-            helper = state.helpers.get(tid)
-            if helper is not None and len(helper):
-                total += predicted_working_set_pages(helper, quantum_us)
-            else:
-                # no helper (UM-style backend) or empty future: assume the
-                # whole footprint is live — the conservative bound
-                total += footprint_pages(prog, state.page_size)
-        return total
+        the predicted per-quantum working sets of all admitted tasks (see
+        :func:`repro.core.simulator.active_demand_pages`)."""
+        return active_demand_pages(state, quantum_us)
 
     def decide(self, prog, arrival_us, state):
         if (

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from repro.cluster.aggregate import RequestStats, peak_concurrent_bytes
 from repro.core.hardware import Platform
 from repro.core.scheduler import Policy, RoundRobinPolicy
 from repro.core.simulator import (
@@ -152,48 +153,32 @@ def serve_trace(
         pool=pool,
     )
     # peak concurrent admitted footprint = the oversubscription actually hit
-    peak_bytes = _peak_admitted_bytes(footprints, res)
-    finished = res.finished_requests()
+    peak_bytes = peak_concurrent_bytes(footprints, res.requests)
     # metrics are normalized by the *offered-load window* (identical across
     # backends replaying the same trace), not each run's own makespan —
-    # otherwise a slow-draining baseline deflates its own denominator
+    # otherwise a slow-draining baseline deflates its own denominator; the
+    # scoreboard itself comes from the shared cluster aggregation helpers
     window_us = max(trace.duration_us(), 1.0)
+    stats = RequestStats.from_records(
+        res.requests, slo.ttft_us, slo.tpot_us, window_us
+    )
     return ServeReport(
         backend=backend,
         capacity_bytes=cap,
         oversubscription=peak_bytes / cap if cap else 0.0,
         slo=slo,
         offered_rps=trace.offered_rate_rps(),
-        n_requests=len(res.requests),
-        n_finished=len(finished),
-        n_rejected=sum(1 for r in res.requests if r.rejected),
-        ttft_p50_us=res.request_percentile_us("ttft", 50.0),
-        ttft_p99_us=res.request_percentile_us("ttft", 99.0),
-        tpot_p50_us=res.request_percentile_us("tpot", 50.0),
-        tpot_p99_us=res.request_percentile_us("tpot", 99.0),
-        latency_p99_us=res.request_percentile_us("latency", 99.0),
-        goodput_per_s=res.goodput_per_s(slo.ttft_us, slo.tpot_us, window_us),
-        throughput_per_s=len(finished) / (window_us * 1e-6),
+        n_requests=stats.n_requests,
+        n_finished=stats.n_finished,
+        n_rejected=stats.n_rejected,
+        ttft_p50_us=stats.ttft_p50_us,
+        ttft_p99_us=stats.ttft_p99_us,
+        tpot_p50_us=stats.tpot_p50_us,
+        tpot_p99_us=stats.tpot_p99_us,
+        latency_p99_us=stats.latency_p99_us,
+        goodput_per_s=stats.goodput_per_s,
+        throughput_per_s=stats.throughput_per_s,
         faults=res.faults,
         migrated_bytes=res.migrated_bytes,
         result=res,
     )
-
-
-def _peak_admitted_bytes(
-    foot: Dict[int, int], res: SimResult
-) -> float:
-    """Sweep admit/finish edges to find the peak concurrent footprint."""
-    edges: List[tuple] = []
-    for rec in res.requests:
-        if rec.admitted_us is None:
-            continue
-        nbytes = foot.get(rec.task_id, 0)
-        edges.append((rec.admitted_us, 1, nbytes))
-        if rec.finished_us is not None:
-            edges.append((rec.finished_us, -1, nbytes))
-    cur = peak = 0.0
-    for _, sign, nbytes in sorted(edges):
-        cur += sign * nbytes
-        peak = max(peak, cur)
-    return peak

@@ -1,0 +1,129 @@
+"""Cluster aggregation: record merging, stat summing, percentile parity."""
+import pytest
+
+from repro.cluster.aggregate import (
+    RequestStats,
+    merge_request_records,
+    merge_sim_results,
+    peak_concurrent_bytes,
+    percentile,
+)
+from repro.core.simulator import RequestRecord, SimResult, TaskStats
+
+
+def _rec(tid, arrival, admitted=None, first=None, finished=None, done=0,
+         total=None, rejected=False, **meta):
+    return RequestRecord(
+        tid, arrival, admitted_us=admitted, first_iter_us=first,
+        finished_us=finished, iterations_done=done, total_iterations=total,
+        rejected=rejected, meta=dict(meta),
+    )
+
+
+def test_percentile_matches_simresult_convention():
+    recs = [
+        _rec(i, 0.0, admitted=0.0, first=10.0 * (i + 1), finished=100.0 + i,
+             total=5, done=5)
+        for i in range(7)
+    ]
+    res = SimResult(1000.0, {}, 0, 0, 0, 0.0, requests=recs)
+    for metric in ("ttft", "tpot", "latency"):
+        xs = sorted(res.request_metric_us(metric))
+        for pct in (50.0, 90.0, 99.0):
+            assert percentile(xs, pct) == res.request_percentile_us(metric, pct)
+    assert percentile([], 50.0) == 0.0
+
+
+def test_merge_passthrough_and_order():
+    a = [_rec(1, 0.0, finished=5.0), _rec(2, 1.0)]
+    b = [_rec(3, 0.5, finished=9.0)]
+    merged = merge_request_records([a, b])
+    assert [r.task_id for r in merged] == [1, 2, 3]
+    assert merged[0] is a[0]  # single-fragment records pass through
+
+
+def test_merge_migrated_fragments():
+    # source fragment: arrived at 0, ran 3/10 iterations, ejected (unfinished)
+    src = _rec(7, 0.0, admitted=10.0, first=20.0, done=3, total=10,
+               tenant="m", ejected_us=40.0)
+    # target fragment: continuation arrived at 50 with the remaining 7 iters
+    dst = _rec(7, 50.0, admitted=55.0, first=60.0, finished=100.0, done=7,
+               total=7, migrated_from="gpu0")
+    (m,) = merge_request_records([[src], [dst]])
+    assert m.arrival_us == 0.0
+    assert m.admitted_us == 10.0
+    assert m.first_iter_us == 20.0  # TTFT measured from the original arrival
+    assert m.finished_us == 100.0
+    assert m.iterations_done == 10
+    assert m.total_iterations == 10  # the source carries the full count
+    assert m.meta["fragments"] == 2
+    assert m.meta["tenant"] == "m"
+    assert m.ttft_us() == 20.0
+    assert m.latency_us() == 100.0
+    assert m.tpot_us() == pytest.approx((100.0 - 20.0) / 9)
+
+
+def test_merge_rerouted_fragment_never_admitted_on_source():
+    src = _rec(3, 5.0, rerouted_us=30.0)  # queued then stolen: no admission
+    dst = _rec(3, 30.0, admitted=31.0, first=40.0, finished=80.0, done=4,
+               total=4)
+    (m,) = merge_request_records([[src], [dst]])
+    assert m.arrival_us == 5.0 and m.admitted_us == 31.0
+    assert m.finished_us == 80.0 and m.total_iterations == 4
+
+
+def test_merge_sim_results_sums_and_maxes():
+    a = SimResult(
+        100.0,
+        {1: TaskStats(2, 10, 50.0, [1.0]), 2: TaskStats(1, 5, 20.0, [])},
+        faults=3, migrated_bytes=100, switches=7, control_us=1.5,
+        requests=[_rec(1, 0.0, finished=90.0)],
+        hbm_used_pages=10, hbm_freed_pages=4,
+    )
+    b = SimResult(
+        250.0,
+        {2: TaskStats(4, 9, 30.0, [2.0, 3.0]), 5: TaskStats(1, 1, 1.0, [])},
+        faults=1, migrated_bytes=50, switches=2, control_us=0.5,
+        requests=[_rec(5, 1.0, finished=200.0)],
+        hbm_used_pages=1, hbm_freed_pages=2,
+    )
+    m = merge_sim_results([a, b])
+    assert m.sim_us == 250.0
+    assert m.faults == 4 and m.migrated_bytes == 150
+    assert m.switches == 9 and m.control_us == 2.0
+    assert m.hbm_used_pages == 11 and m.hbm_freed_pages == 6
+    assert m.per_task[2].completions == 5
+    assert m.per_task[2].commands == 14
+    assert m.per_task[2].busy_us == 50.0
+    assert m.per_task[2].latencies_us == [2.0, 3.0]
+    assert m.per_task[1].completions == 2 and m.per_task[5].completions == 1
+    # inputs not mutated by the stat merge
+    assert a.per_task[2].completions == 1
+    assert [r.task_id for r in m.requests] == [1, 5]
+
+
+def test_request_stats_scoreboard():
+    recs = [
+        _rec(0, 0.0, admitted=0.0, first=100.0, finished=300.0, done=3, total=3),
+        _rec(1, 0.0, admitted=0.0, first=5_000.0, finished=9_000.0, done=2, total=2),
+        _rec(2, 0.0, rejected=True),
+        _rec(3, 0.0),  # never finished
+    ]
+    st = RequestStats.from_records(recs, ttft_slo_us=1_000.0,
+                                   tpot_slo_us=None, window_us=1_000_000.0)
+    assert st.n_requests == 4 and st.n_finished == 2 and st.n_rejected == 1
+    assert st.goodput_per_s == pytest.approx(1.0)  # only record 0 met TTFT
+    assert st.throughput_per_s == pytest.approx(2.0)
+    assert st.ttft_p50_us == 5_000.0  # [100, 5000] -> index 1
+    assert st.latency_p99_us == 9_000.0
+
+
+def test_peak_concurrent_bytes():
+    foot = {1: 100, 2: 50, 3: 70}
+    recs = [
+        _rec(1, 0.0, admitted=0.0, finished=10.0),
+        _rec(2, 0.0, admitted=5.0, finished=20.0),  # overlaps 1 and 3
+        _rec(3, 0.0, admitted=12.0, finished=30.0),
+        _rec(4, 0.0),  # never admitted: no contribution
+    ]
+    assert peak_concurrent_bytes(foot, recs) == 150.0

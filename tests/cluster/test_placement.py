@@ -1,0 +1,118 @@
+"""Placement policies against synthetic per-GPU load views."""
+import pytest
+
+from repro.cluster.placement import (
+    LeastLoadedPlacement,
+    MSchedPlacement,
+    RoundRobinPlacement,
+    make_placement,
+)
+from repro.core.hardware import A100_40G, RTX5080
+from repro.core.hbm import HBMPool
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import SimState
+from repro.core.workloads import TaskProgram, footprint_pages
+
+PAGE = 4096
+
+
+class _Prog(TaskProgram):
+    """Finite program with an exact page footprint."""
+
+    def __init__(self, task_id, pages):
+        super().__init__(task_id, page_size=PAGE)
+        self.space.malloc(pages * PAGE, "buf")
+
+    def iteration(self, it):
+        return []
+
+
+class FakeCore:
+    def __init__(
+        self, name, capacity_pages, progs=(), platform=RTX5080,
+        waiting_pages=0, quantum=5_000.0,
+    ):
+        self.name = name
+        self._state = SimState(
+            now=0.0,
+            platform=platform,
+            pool=HBMPool(capacity_pages),
+            policy=RoundRobinPolicy(quantum),
+            page_size=PAGE,
+            active={p.task_id: p for p in progs},
+            helpers={},
+            waiting=0,
+            waiting_pages=waiting_pages,
+        )
+
+    def state_view(self):
+        return self._state
+
+
+def test_round_robin_cycles():
+    cores = [FakeCore(f"g{i}", 100) for i in range(3)]
+    pol = RoundRobinPlacement()
+    cand = _Prog(99, 10)
+    assert [pol.place(cand, 0.0, cores) for _ in range(5)] == [0, 1, 2, 0, 1]
+
+
+def test_least_loaded_counts_tasks_not_bytes():
+    big = FakeCore("g0", 1000, [_Prog(0, 800)])  # one huge task
+    small = FakeCore("g1", 1000, [_Prog(1, 10), _Prog(2, 10)])  # two tiny
+    pol = LeastLoadedPlacement()
+    # blind to memory: picks the GPU with fewer tasks even though it is the
+    # memory-pressured one — the mispacking MSchedPlacement exists to fix
+    assert pol.place(_Prog(99, 10), 0.0, [big, small]) == 0
+
+
+def test_msched_placement_fits_by_predicted_demand():
+    # helperless active tasks count at whole-footprint (conservative bound)
+    pressured = FakeCore("g0", 1000, [_Prog(0, 800)])
+    free = FakeCore("g1", 1000, [_Prog(1, 10), _Prog(2, 10)])
+    pol = MSchedPlacement(headroom=0.9)
+    cand = _Prog(99, 200)
+    # g0: 0.9*1000 - 800 = 100 < 200 -> no fit; g1: 900 - 20 = 880 -> fit
+    assert pol.place(cand, 0.0, [pressured, free]) == 1
+
+
+def test_msched_placement_best_fit_is_tightest():
+    a = FakeCore("g0", 1000, [_Prog(0, 100)])  # free 800
+    b = FakeCore("g1", 1000, [_Prog(1, 600)])  # free 300
+    pol = MSchedPlacement(headroom=0.9)
+    # both fit a 200-page candidate; best-fit packs the tighter GPU (g1),
+    # preserving g0's large contiguous headroom for big arrivals
+    assert pol.place(_Prog(99, 200), 0.0, [a, b]) == 1
+
+
+def test_msched_placement_counts_wait_queue():
+    quiet = FakeCore("g0", 1000)
+    backlogged = FakeCore("g1", 1000, waiting_pages=850)
+    pol = MSchedPlacement(headroom=0.9)
+    assert pol.place(_Prog(99, 200), 0.0, [quiet, backlogged]) == 0
+
+
+def test_msched_placement_overload_is_capacity_relative():
+    # nothing fits; the 2x-capacity GPU absorbs the spill
+    small = FakeCore("g0", 1000, [_Prog(0, 900)], platform=A100_40G)
+    big = FakeCore("g1", 2000, [_Prog(1, 1800)])
+    pol = MSchedPlacement(headroom=0.9)
+    cand = _Prog(99, 500)
+    # g0: (900+500)/1000 = 1.4; g1: (1800+500)/2000 = 1.15 -> g1
+    assert pol.place(cand, 0.0, [small, big]) == 1
+
+
+def test_make_placement_registry():
+    assert isinstance(make_placement("roundrobin"), RoundRobinPlacement)
+    assert isinstance(make_placement("leastloaded"), LeastLoadedPlacement)
+    assert isinstance(make_placement("msched"), MSchedPlacement)
+    pol = MSchedPlacement(headroom=0.5)
+    assert make_placement(pol) is pol
+    with pytest.raises(KeyError):
+        make_placement("nope")
+
+
+def test_footprint_pages_rounds_up():
+    p = _Prog(0, 3)
+    assert footprint_pages(p, PAGE) == 3
+    p.space.malloc(PAGE + 1, "ragged")  # 2 pages after round-up
+    assert footprint_pages(p, PAGE) == 5

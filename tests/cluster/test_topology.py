@@ -1,0 +1,105 @@
+"""Topology model: link graph, bandwidth contention, host DRAM budget."""
+import pytest
+
+from repro.cluster.topology import (
+    HOST,
+    ClusterTopology,
+    GPUNode,
+    homogeneous,
+    mixed,
+)
+from repro.core.hardware import A100_40G, A100_80G, RTX5080
+
+
+def test_homogeneous_builds_host_links():
+    topo = homogeneous(3, RTX5080)
+    assert len(topo) == 3
+    for g in topo.gpus:
+        link = topo.link(g.name, HOST)
+        assert link is not None and link.kind == "pcie"
+        assert link.gbps == min(RTX5080.d2h_gbps, RTX5080.h2d_gbps)
+    assert topo.link("gpu0", "gpu1") is None
+    # host-staged two-hop path
+    path = topo.path("gpu0", "gpu2")
+    assert [l.kind for l in path] == ["pcie", "pcie"]
+
+
+def test_nvlink_mesh_gives_direct_path():
+    topo = homogeneous(2, RTX5080, nvlink_gbps=300.0)
+    path = topo.path("gpu0", "gpu1")
+    assert len(path) == 1 and path[0].kind == "nvlink"
+    assert path[0].gbps == 300.0
+
+
+def test_capacity_override_and_mixed():
+    topo = mixed([(A100_40G, 10 << 30), (A100_80G, None)])
+    assert topo.gpus[0].hbm_bytes == 10 << 30
+    assert topo.gpus[1].hbm_bytes == 80 << 30
+    # per-GPU host link tracks each device's own PCIe bandwidth
+    assert topo.link("gpu0", HOST).gbps == A100_40G.d2h_gbps
+    assert topo.link("gpu1", HOST).gbps == A100_80G.d2h_gbps
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError):
+        ClusterTopology([GPUNode("g", RTX5080), GPUNode("g", RTX5080)])
+    with pytest.raises(ValueError):
+        ClusterTopology([GPUNode("g", RTX5080)], nvlinks=[("g", "nope", 10.0)])
+
+
+def test_host_staged_transfer_timing():
+    topo = homogeneous(2, RTX5080)
+    nbytes = 1 << 30
+    plan = topo.plan_transfer("gpu0", "gpu1", nbytes, now=1000.0)
+    assert plan is not None and plan.staged
+    leg_us = nbytes / (RTX5080.d2h_gbps * 1e3)
+    assert plan.arrival_us == pytest.approx(1000.0 + 2 * leg_us)
+    assert len(plan.legs) == 2
+    # staged bytes occupy host DRAM until the transfer lands
+    assert topo.host_staged_bytes(plan.start_us) == nbytes
+    assert topo.host_staged_bytes(plan.arrival_us + 1.0) == 0
+
+
+def test_p2p_transfer_skips_host_budget():
+    topo = homogeneous(2, RTX5080, host_dram_bytes=1 << 20, nvlink_gbps=300.0)
+    nbytes = 1 << 30  # far beyond the 1 MiB host budget
+    plan = topo.plan_transfer("gpu0", "gpu1", nbytes, now=0.0)
+    assert plan is not None and not plan.staged
+    assert plan.arrival_us == pytest.approx(nbytes / (300.0 * 1e3))
+    assert topo.deferred == 0
+
+
+def test_link_contention_halves_bandwidth():
+    topo = homogeneous(3, RTX5080)
+    nbytes = 1 << 30
+    leg_us = nbytes / (RTX5080.d2h_gbps * 1e3)
+    a = topo.plan_transfer("gpu0", "gpu1", nbytes, now=0.0)
+    # second transfer from the same source while the first still occupies the
+    # gpu0<->host link: that leg runs at half bandwidth...
+    b = topo.plan_transfer("gpu0", "gpu2", nbytes, now=0.0)
+    assert b.legs[0][1] == pytest.approx(2 * leg_us)
+    # ...and the second leg (gpu2's own link, uncontended at its start) at
+    # full bandwidth
+    assert b.arrival_us == pytest.approx(3 * leg_us)
+    assert a.arrival_us == pytest.approx(2 * leg_us)
+    # once everything drained, a new transfer sees full bandwidth again
+    c = topo.plan_transfer("gpu0", "gpu1", nbytes, now=b.arrival_us + 1.0)
+    assert c.arrival_us - c.start_us == pytest.approx(2 * leg_us)
+
+
+def test_host_dram_budget_defers():
+    topo = homogeneous(2, RTX5080, host_dram_bytes=1 << 30)
+    ok = topo.plan_transfer("gpu0", "gpu1", 800 << 20, now=0.0)
+    assert ok is not None
+    denied = topo.plan_transfer("gpu1", "gpu0", 800 << 20, now=0.0)
+    assert denied is None
+    assert topo.deferred == 1
+    # after the first staging drains, the same transfer fits
+    late = topo.plan_transfer("gpu1", "gpu0", 800 << 20, now=ok.arrival_us + 1.0)
+    assert late is not None
+
+
+def test_transfer_to_self_rejected():
+    topo = homogeneous(2, RTX5080)
+    with pytest.raises(ValueError):
+        topo.plan_transfer("gpu0", "gpu0", 1 << 20, now=0.0)

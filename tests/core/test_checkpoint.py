@@ -1,0 +1,153 @@
+"""Checkpointing coverage: round-trip fidelity, retention, size accounting,
+async overlap, and the working-set manifests the inter-GPU migration path
+stages through the same format."""
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+msgpack = pytest.importorskip("msgpack")
+
+from repro.checkpointing import checkpoint
+from repro.cluster.migration import (
+    checkpoint_roundtrip,
+    pack_working_set,
+    unpack_working_set,
+)
+from repro.core.simulator import EjectedTask
+from repro.core.workloads import VecAddTask
+
+
+def _tree():
+    return {
+        "params": {
+            "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones((4,), np.float64),
+        },
+        "step_scale": np.int64(7),
+        "stack": [np.zeros((2, 2), np.int32), np.full((3,), 2.5, np.float32)],
+    }
+
+
+def _like(tree):
+    return jax.tree.map(lambda a: np.zeros_like(a), tree)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    d = checkpoint.save(str(tmp_path), 3, tree)
+    assert os.path.basename(d) == "step_00000003"
+    restored = checkpoint.restore(str(tmp_path), 3, _like(tree))
+    flat_a = jax.tree.leaves(tree)
+    flat_b = jax.tree.leaves(restored)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        b = np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bfloat16_roundtrip(tmp_path):
+    """ml_dtypes leaves survive the uint-view detour."""
+    tree = {"w": jax.numpy.arange(8, dtype=jax.numpy.bfloat16)}
+    checkpoint.save(str(tmp_path), 0, tree)
+    restored = checkpoint.restore(str(tmp_path), 0, _like(tree))
+    out = np.asarray(restored["w"])
+    assert out.dtype == jax.numpy.bfloat16
+    np.testing.assert_array_equal(out, np.asarray(tree["w"]))
+
+
+def test_retention_and_latest_step(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    for step in (1, 2, 5, 9):
+        checkpoint.save(str(tmp_path), step, {"x": np.int64(step)}, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000005", "step_00000009"]
+    assert checkpoint.latest_step(str(tmp_path)) == 9
+
+
+def test_manifest_size_accounting(tmp_path):
+    """The manifest's dtype/shape entries account for every staged byte."""
+    tree = _tree()
+    d = checkpoint.save(str(tmp_path), 0, tree)
+    with open(os.path.join(d, checkpoint.MANIFEST), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    leaves = jax.tree.leaves(tree)
+    assert len(meta["leaves"]) == len(leaves)
+    manifest_bytes = sum(
+        np.dtype(e["dtype"]).itemsize * int(np.prod(e["shape"], dtype=np.int64))
+        for e in meta["leaves"]
+    )
+    assert manifest_bytes == sum(a.nbytes for a in leaves)
+    # every referenced shard exists on disk
+    for e in meta["leaves"]:
+        assert os.path.exists(os.path.join(d, e["file"]))
+
+
+def test_atomic_overwrite(tmp_path):
+    checkpoint.save(str(tmp_path), 1, {"x": np.int64(1)})
+    checkpoint.save(str(tmp_path), 1, {"x": np.int64(2)})
+    restored = checkpoint.restore(str(tmp_path), 1, {"x": np.zeros((), np.int64)})
+    assert int(restored["x"]) == 2
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_async_checkpointer_overlap_and_errors(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), keep=3)
+    ck.save_async(4, {"x": np.arange(3)})
+    ck.wait()
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("")
+    bad = checkpoint.AsyncCheckpointer(str(blocker / "x"))
+    bad.save_async(0, {"x": np.arange(3)})
+    with pytest.raises(Exception):
+        bad.wait()
+    # the error is consumed: the checkpointer is reusable afterwards
+    assert bad.last_error is None
+
+
+# --------------------------------------------------------------------------
+# Working-set manifests (the inter-GPU migration path)
+# --------------------------------------------------------------------------
+
+
+def _ejected(runs):
+    prog = VecAddTask(5, n_bytes=64 << 10, page_size=4096)
+    return EjectedTask(
+        program=prog, completed=3, resident_runs=list(runs), record=None
+    )
+
+
+def test_working_set_pack_unpack():
+    runs = [(100, 140), (200, 201), (512, 600)]
+    tree = pack_working_set(_ejected(runs), 4096)
+    assert unpack_working_set(tree) == runs
+    assert int(tree["completed"]) == 3
+    assert int(tree["page_size"]) == 4096
+
+
+def test_working_set_checkpoint_roundtrip_partial(tmp_path):
+    """A *partial* working set (only some of the footprint resident at
+    ejection) survives the staged checkpoint exactly."""
+    runs = [(0, 7), (9, 10), (64, 96)]
+    ej = _ejected(runs)
+    restored = checkpoint_roundtrip(str(tmp_path), 0, ej, 4096)
+    assert restored == runs
+    assert checkpoint.latest_step(str(tmp_path)) == 0
+    # empty working set round-trips too (a task ejected before it ever ran)
+    assert checkpoint_roundtrip(str(tmp_path), 1, _ejected([]), 4096) == []
+
+
+def test_working_set_checkpoint_detects_stale_manifest(tmp_path, monkeypatch):
+    """A seq collision on the stage dir (restoring another task's manifest)
+    fails loud instead of warming the wrong pages onto the target GPU."""
+    checkpoint_roundtrip(str(tmp_path), 0, _ejected([(0, 4)]), 4096)  # task 5
+    other = _ejected([(8, 12)])
+    other.program.task_id = 99
+    # simulate the collision: the save half is lost, the restore half reads
+    # task 5's staged manifest
+    monkeypatch.setattr(checkpoint, "save", lambda *a, **kw: None)
+    with pytest.raises(RuntimeError, match="round-trip mismatch"):
+        checkpoint_roundtrip(str(tmp_path), 0, other, 4096)

@@ -1,0 +1,61 @@
+"""Platform presets: the paper testbeds plus the heterogeneous datacenter
+variants the cluster scheduler mixes."""
+import dataclasses
+
+import pytest
+
+from repro.core.hardware import (
+    A100_40G,
+    A100_80G,
+    H100_80G,
+    PLATFORMS,
+    RTX3080,
+    RTX5080,
+    TPU_V5E,
+    fault_bandwidth_gbps,
+    hbm_variant,
+)
+
+
+def test_all_presets_registered():
+    for p in (RTX5080, RTX3080, A100_40G, A100_80G, H100_80G, TPU_V5E):
+        assert PLATFORMS[p.name] is p
+    assert len({p.name for p in PLATFORMS.values()}) == len(PLATFORMS)
+
+
+def test_hbm_capacity_classes():
+    assert A100_80G.hbm_bytes == 2 * A100_40G.hbm_bytes
+    assert A100_40G.hbm_bytes == 40 << 30
+    assert H100_80G.hbm_bytes == 80 << 30
+
+
+def test_variants_differ_in_swap_bandwidth():
+    """The point of heterogeneous presets: same fault control plane, visibly
+    different migration bandwidths."""
+    assert A100_40G.d2h_gbps < A100_80G.d2h_gbps < H100_80G.d2h_gbps
+    assert A100_40G.duplex_cap_gbps < A100_80G.duplex_cap_gbps
+    assert H100_80G.duplex_cap_gbps > A100_80G.duplex_cap_gbps
+    # the control-plane-dominated fault cost is the shared KMD path
+    assert A100_40G.fault_total_us == A100_80G.fault_total_us == 31.79
+
+
+@pytest.mark.parametrize("plat", [A100_40G, A100_80G, H100_80G])
+def test_datacenter_presets_sane(plat):
+    assert plat.page_size == 4 << 10
+    assert 0 < plat.fault_transfer_us < plat.fault_total_us
+    # duplex ceiling sits between one-way and the naive two-way sum
+    assert plat.d2h_gbps < plat.duplex_cap_gbps < plat.d2h_gbps + plat.h2d_gbps
+    # faulting is catastrophically slower than batched DMA (paper §3)
+    assert fault_bandwidth_gbps(plat) < plat.h2d_gbps / 10
+
+
+def test_hbm_variant_helper():
+    v = hbm_variant(A100_80G, 24 << 30)
+    assert v.hbm_bytes == 24 << 30
+    assert v.name == "a100_80g_24g"
+    assert v.d2h_gbps == A100_80G.d2h_gbps
+    # frozen source untouched
+    assert A100_80G.hbm_bytes == 80 << 30
+    named = hbm_variant(RTX5080, 8 << 30, name="rtx5080_binned")
+    assert named.name == "rtx5080_binned"
+    assert dataclasses.replace(named, name=RTX5080.name, hbm_bytes=16 << 30) == RTX5080
