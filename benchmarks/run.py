@@ -29,6 +29,7 @@ MODULES = [
     "sim_throughput",
     "serve_oversub",
     "cluster_oversub",
+    "p2p_prefetch",
     "kernels_bench",
     "roofline_report",
 ]

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Docs drift check: fail when README code blocks reference commands, flags,
+or files that no longer exist.
+
+Validates, for every fenced code block in README.md (and any extra markdown
+files passed on the command line):
+
+  * ``python -m <module>`` — the module resolves to a real file in the repo
+    (external tools like pytest/pip are exempt);
+  * ``--flag`` tokens on such lines — the literal flag string appears in the
+    module's source (argparse definitions drift silently otherwise);
+  * ``python <path>.py`` — the script exists;
+  * ``pip install -r <file>`` — the requirements file exists.
+
+Also checks that relative markdown links ``[...](path)`` point at existing
+files. Run from anywhere: paths resolve against the repo root (this
+script's parent's parent).
+
+Usage: python scripts/check_docs.py [README.md docs/architecture.md ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# modules invoked with -m that are not part of this repo
+EXTERNAL_MODULES = {"pytest", "pip"}
+# flags handled by tools we do not inspect
+GENERIC_FLAGS = {"-m", "-x", "-q", "-r"}
+
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#]+)(?:#[^)]*)?\)")
+
+
+def module_path(mod: str) -> Path | None:
+    """Resolve a ``python -m`` target to a repo file (benchmarks/examples
+    live at the root; library code under src/)."""
+    for root in (REPO, REPO / "src"):
+        cand = root / Path(*mod.split("."))
+        if cand.with_suffix(".py").is_file():
+            return cand.with_suffix(".py")
+        if (cand / "__init__.py").is_file():
+            return cand / "__init__.py"
+    return None
+
+
+def check_code_line(line: str, md: Path, errors: list[str]) -> None:
+    tokens = line.split()
+    if "python" not in [Path(t).name for t in tokens[:2]] and not any(
+        t.startswith("python") for t in tokens
+    ):
+        return
+    flags = [t for t in tokens if t.startswith("--")]
+    if "-m" in tokens:
+        mod = tokens[tokens.index("-m") + 1]
+        base = mod.split(".")[0]
+        if base in EXTERNAL_MODULES:
+            return
+        path = module_path(mod)
+        if path is None:
+            errors.append(f"{md.name}: no such module `{mod}`: {line.strip()}")
+            return
+        src = path.read_text()
+        if path.name == "__init__.py":
+            # a package CLI may define its argparse in sibling modules
+            src = "\n".join(
+                p.read_text() for p in sorted(path.parent.glob("*.py"))
+            )
+        for flag in flags:
+            name = flag.split("=")[0]
+            if name in GENERIC_FLAGS:
+                continue
+            if name not in src:
+                errors.append(
+                    f"{md.name}: `{mod}` no longer takes `{name}`: "
+                    f"{line.strip()}"
+                )
+        return
+    for tok in tokens:
+        if tok.endswith(".py") and not tok.startswith("-"):
+            if not (REPO / tok).is_file():
+                errors.append(f"{md.name}: no such file `{tok}`: {line.strip()}")
+    if "pip" in tokens and "-r" in tokens:
+        req = tokens[tokens.index("-r") + 1]
+        if not (REPO / req).is_file():
+            errors.append(f"{md.name}: no such requirements file `{req}`")
+
+
+def check_markdown(md: Path, errors: list[str]) -> None:
+    text = md.read_text()
+    for block in FENCE_RE.findall(text):
+        for line in block.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            check_code_line(line, md, errors)
+    for target in LINK_RE.findall(text):
+        if "://" in target:
+            continue
+        if not (md.parent / target).exists() and not (REPO / target).exists():
+            errors.append(f"{md.name}: broken link `{target}`")
+
+
+def main() -> int:
+    files = [Path(a) for a in sys.argv[1:]] or [
+        REPO / "README.md",
+        REPO / "docs" / "architecture.md",
+    ]
+    errors: list[str] = []
+    for md in files:
+        if not md.is_file():
+            errors.append(f"missing documentation file: {md}")
+            continue
+        check_markdown(md, errors)
+    for e in errors:
+        print(f"DOCS CHECK FAILED: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs check ok ({', '.join(f.name for f in files)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

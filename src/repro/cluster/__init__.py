@@ -10,7 +10,11 @@ The cluster subsystem composes N per-GPU simulation cores
     that best-fits predicted working sets against residency headroom);
   * :mod:`~repro.cluster.migration` — inter-GPU task migration: checkpoint
     the working set through ``repro.checkpointing``, pay the link-graph
-    transfer, resume on the target;
+    transfer, resume on the target; lazy manifest-only moves over NVLink,
+    and the admission-rejection retry protocol;
+  * :mod:`~repro.cluster.prefetch` — NVLink peer-to-peer working-set
+    prefetch: the page-location directory's wiring into each GPU's extended
+    context switch, and cluster-wide OPT eviction;
   * :mod:`~repro.cluster.aggregate` — merge per-GPU results/records into
     cluster-wide goodput/TTFT/TPOT;
   * :mod:`~repro.cluster.engine` — the ``simulate_cluster()`` entrypoint.
@@ -39,10 +43,16 @@ from repro.cluster.placement import (  # noqa: F401
     RoundRobinPlacement,
     make_placement,
 )
+from repro.cluster.prefetch import (  # noqa: F401
+    PeerFetchEvent,
+    PeerPrefetchFabric,
+)
 from repro.cluster.topology import (  # noqa: F401
     ClusterTopology,
     GPUNode,
+    LingerEntry,
     Link,
+    PageDirectory,
     TransferPlan,
     homogeneous,
     mixed,

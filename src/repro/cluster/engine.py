@@ -34,12 +34,17 @@ from repro.cluster.aggregate import (
     peak_concurrent_bytes,
 )
 from repro.cluster.migration import MigrationEvent, Rebalancer
-from repro.cluster.placement import PlacementPolicy, make_placement
+from repro.cluster.placement import MSchedPlacement, PlacementPolicy, make_placement
+from repro.cluster.prefetch import PeerFetchEvent, PeerPrefetchFabric
 from repro.cluster.topology import ClusterTopology
 
 
 @dataclasses.dataclass
 class GPUReport:
+    """Per-device slice of a cluster run: how many arrivals placement
+    dispatched here and the GPU's own ``SimResult`` (a migrated request
+    contributes partial work to every GPU it visited)."""
+
     name: str
     platform: str
     capacity_bytes: int
@@ -61,6 +66,12 @@ class GPUReport:
 
 @dataclasses.dataclass
 class ClusterReport:
+    """Fleet-level result of one ``simulate_cluster`` run: the cluster-wide
+    serving scoreboard (``stats``, over de-fragmented request records), the
+    merged ``SimResult``, per-GPU reports, the migration log, and — on
+    NVLink fleets — the peer-prefetch accounting (fetch events, bytes moved
+    GPU-to-GPU, and host-fallback pages lost to source-side eviction)."""
+
     backend: str
     placement: str
     n_gpus: int
@@ -73,8 +84,14 @@ class ClusterReport:
     per_gpu: List[GPUReport]
     migrations: List[MigrationEvent]
     deferred_migrations: int
+    # NVLink peer-prefetch accounting (zero/empty on peer-less fleets)
+    peer_fetches: List[PeerFetchEvent] = dataclasses.field(default_factory=list)
+    peer_fetch_bytes: int = 0
+    peer_fallback_pages: int = 0  # lingered pages lost to source eviction
+    linger_reclaimed_pages: int = 0
 
     def to_row(self) -> Dict[str, object]:
+        """Flatten for JSON artifacts (benchmarks)."""
         row: Dict[str, object] = {
             "backend": self.backend,
             "placement": self.placement,
@@ -89,6 +106,9 @@ class ClusterReport:
                 {m.task_id for m in self.migrations}
             ),
             "deferred_migrations": self.deferred_migrations,
+            "peer_fetches": len(self.peer_fetches),
+            "peer_fetch_bytes": self.peer_fetch_bytes,
+            "peer_fallback_pages": self.peer_fallback_pages,
             "per_gpu": [g.to_row() for g in self.per_gpu],
         }
         row.update(dataclasses.asdict(self.stats))
@@ -112,6 +132,7 @@ def simulate_cluster(
     max_moves_per_tick: int = 1,
     stage_dir: Optional[str] = None,
     pool: str = "run",
+    peer_prefetch: str = "auto",
 ) -> ClusterReport:
     """Replay ``trace`` across the cluster and report fleet-level serving
     quality.
@@ -121,6 +142,14 @@ def simulate_cluster(
     topology. ``rebalance_period_us`` enables inter-GPU migration at that
     cadence; ``stage_dir`` routes each checkpointed move through the sharded
     checkpoint format on disk. Other knobs mirror ``serve_trace``.
+
+    ``peer_prefetch`` controls the NVLink peer-to-peer working-set machinery
+    (page-location directory, lazy p2p migration, peer-sourced extended
+    context switches, cluster-wide OPT eviction): ``"auto"`` enables it
+    exactly when the topology has NVLink edges and the backend is
+    ``msched``; ``"off"`` forces the plain composition (bulk transfers even
+    over NVLink edges). Peer-less topologies and 1-GPU clusters behave
+    identically under both settings — the machinery is never constructed.
     """
     # lazy: serving depends on cluster.aggregate at module level; the
     # reverse edge must not exist at import time
@@ -155,40 +184,96 @@ def simulate_cluster(
     # contention state is per-run: a reused topology must not price this
     # run's transfers against a previous run's in-flight migrations
     topology.reset_transfers()
+    # NVLink fleets get the peer-prefetch fabric: page-location directory,
+    # peer-sourced extended context switches, cluster-wide OPT eviction.
+    # Peer-less fleets never construct it — their composition is untouched.
+    if peer_prefetch not in ("auto", "off"):
+        raise ValueError(
+            f"peer_prefetch must be 'auto' or 'off', got {peer_prefetch!r}"
+        )
+    fabric = None
+    wired_placement = False
+    prev_placement_topo = None
+    if (
+        peer_prefetch != "off"
+        and backend == "msched"
+        and topology.has_nvlink()
+    ):
+        fabric = PeerPrefetchFabric(topology, cores)
+        fabric.wire()
+        if isinstance(placement, MSchedPlacement):
+            # fluid-share-aware landing ties for *this* run's topology;
+            # restored afterwards so a reused instance never consults a
+            # previous run's contention state
+            prev_placement_topo = placement.topology
+            placement.topology = topology
+            wired_placement = True
     rebalancer = (
         Rebalancer(
             topology,
             threshold=rebalance_threshold,
             max_moves=max_moves_per_tick,
             stage_dir=stage_dir,
+            prefetch=fabric,
         )
         if rebalance_period_us
         else None
     )
+    if rebalancer is not None:
+        # the retry protocol needs the fleet even before the first tick
+        rebalancer.attach(cores)
     placed = [0] * len(cores)
 
     # -- the cluster event loop --------------------------------------------
-    ev_i = 0
-    next_tick = rebalance_period_us if rebalancer else float("inf")
-    while True:
-        t_ev = events[ev_i].time_us if ev_i < len(events) else float("inf")
-        t_tick = next_tick if next_tick <= horizon else float("inf")
-        T = min(t_ev, t_tick)
-        if T == float("inf"):
-            break
-        for core in cores:
-            core.run(T, final=False)
-        if t_ev <= t_tick:
-            ev = events[ev_i]
-            ev_i += 1
-            gi = placement.place(ev.program, ev.time_us, cores)
-            cores[gi].inject(ev)
-            placed[gi] += 1
-        else:
-            rebalancer.tick(cores, T)
-            next_tick += rebalance_period_us
-    for core in cores:
-        core.run(horizon, final=True)
+    try:
+        ev_i = 0
+        next_tick = rebalance_period_us if rebalancer else float("inf")
+        while True:
+            t_ev = events[ev_i].time_us if ev_i < len(events) else float("inf")
+            t_tick = next_tick if next_tick <= horizon else float("inf")
+            T = min(t_ev, t_tick)
+            if T == float("inf"):
+                break
+            for core in cores:
+                core.run(T, final=False)
+            if t_ev <= t_tick:
+                ev = events[ev_i]
+                ev_i += 1
+                gi = placement.place(ev.program, ev.time_us, cores)
+                cores[gi].inject(ev)
+                placed[gi] += 1
+            else:
+                rebalancer.tick(cores, T)
+                if fabric is not None:
+                    # lingering copies of finished tasks are garbage
+                    fabric.reap()
+                next_tick += rebalance_period_us
+        while True:
+            for core in cores:
+                core.run(horizon, final=True)
+            # a reject hook firing during the terminal drain may bounce a
+            # continuation into a core that already drained — re-drain until
+            # quiescent (the retry budget bounds the bounces, so this
+            # terminates; without retries pending is empty after one pass
+            # and the composition is exactly the single terminal drain)
+            leftover = [c for c in cores if c.pending]
+            if not leftover:
+                break
+            # the next pass must actually re-enter the drained cores: push
+            # the drain horizon past both the bounced arrivals and the
+            # cores' (possibly overrun) clocks
+            horizon = max(
+                [horizon]
+                + [c.pending[0].time_us + 1.0 for c in leftover]
+                + [c.t + 1.0 for c in leftover]
+            )
+    finally:
+        if wired_placement:
+            placement.topology = prev_placement_topo
+    if fabric is not None:
+        # reclaim every remaining linger copy so end-of-run HBM accounting
+        # balances (leak checks read pool.used)
+        fabric.reap(final=True)
 
     results = [core.result() for core in cores]
     records = merge_request_records([r.requests for r in results])
@@ -221,4 +306,8 @@ def simulate_cluster(
         ],
         migrations=list(rebalancer.events) if rebalancer else [],
         deferred_migrations=topology.deferred,
+        peer_fetches=list(fabric.fetches) if fabric else [],
+        peer_fetch_bytes=fabric.peer_bytes() if fabric else 0,
+        peer_fallback_pages=fabric.fallback_pages if fabric else 0,
+        linger_reclaimed_pages=fabric.reclaimed_pages if fabric else 0,
     )

@@ -23,13 +23,24 @@ the pressured GPU has nothing resident, so rerouting it costs nothing but
 the decision. :class:`Rebalancer` always prefers steals and only checkpoints
 running tasks when the wait queue is empty.
 
-Known policy interaction: a migrated continuation queues behind the *target*
+Between NVLink-connected GPUs the bulk copy is skipped entirely (the *lazy*
+``p2p`` move): only the working-set manifest ships over the peer edge, the
+pages linger on the source — demoted to its eviction-list head, free to
+scavenge — and the target's extended context switches prefetch them over
+NVLink on demand of the planner (see :mod:`repro.cluster.prefetch`). The
+host-staged checkpoint path remains for PCIe-only pairs.
+
+Migration retry protocol: a migrated continuation queues behind the *target*
 GPU's admission controller like any arrival, so a controller with a wait
 deadline (``MSchedAdmission(max_wait_us=...)``) can reject a
-partially-executed request outright — the record ends rejected with its
-completed prefix banked on the source. A return-to-source / retry protocol
-is an open item (ROADMAP); the shipped benchmarks use deadline-free
-admission, where continuations always eventually admit.
+partially-executed request. Instead of dropping the completed prefix, the
+rebalancer's rejection handler (installed on every core via
+:meth:`Rebalancer.attach`) returns the continuation to the GPU that still
+holds its lingering working set, else to the original source, else to the
+least-pressured GPU — up to ``max_retries`` bounces before the rejection is
+allowed to stand. Fresh (never-executed) arrivals are still shed normally:
+load shedding semantics only change for work the cluster already invested
+in.
 """
 from __future__ import annotations
 
@@ -52,17 +63,30 @@ from repro.cluster.topology import ClusterTopology
 
 @dataclasses.dataclass
 class MigrationEvent:
-    """One completed rebalance move, for reporting."""
+    """One completed rebalance move, for reporting.
+
+    ``kind`` is ``"steal"`` (queued candidate re-routed, nothing resident),
+    ``"checkpoint"`` (running task's working set bulk-transferred through
+    the link graph), ``"p2p"`` (lazy NVLink move: only the manifest ships,
+    ``nbytes`` is manifest bytes and ``pages`` the working set left
+    lingering on the source as a prefetch source), or ``"retry"`` (a
+    deadline-rejected continuation returned to a GPU with headroom)."""
 
     time_us: float
     task_id: int
     src: str
     dst: str
-    kind: str  # "steal" (queued candidate) | "checkpoint" (running task)
+    kind: str  # "steal" | "checkpoint" | "p2p" | "retry"
     pages: int
     nbytes: int
     arrival_us: float  # when the task lands on dst
     completed_iters: int = 0
+
+
+# lazy p2p migration ships only the working-set manifest (run intervals +
+# header), not the pages; sized after the checkpoint manifest encoding
+MANIFEST_BASE_BYTES = 96
+MANIFEST_RUN_BYTES = 16
 
 
 class ResumedTask(TaskProgram):
@@ -161,7 +185,13 @@ class Rebalancer:
     plus the queued backlog). Each tick moves at most ``max_moves`` tasks
     from the most- to the least-pressured GPU while the gap exceeds
     ``threshold``; steals (queued candidates) are free, checkpointed moves
-    of running tasks pay the link-graph transfer time and host staging.
+    of running tasks pay the link-graph transfer time and host staging, and
+    NVLink pairs with a :class:`~repro.cluster.prefetch.PeerPrefetchFabric`
+    (``prefetch``) migrate *lazily* — manifest only, working set lingers on
+    the source for peer prefetch.
+
+    :meth:`attach` additionally installs the migration **retry protocol** on
+    every core (see module docstring).
     """
 
     def __init__(
@@ -171,6 +201,8 @@ class Rebalancer:
         max_moves: int = 1,
         quantum_us: Optional[float] = None,
         stage_dir: Optional[str] = None,
+        prefetch=None,
+        max_retries: int = 3,
     ):
         assert threshold > 0
         self.topology = topology
@@ -178,8 +210,105 @@ class Rebalancer:
         self.max_moves = max_moves
         self.quantum_us = quantum_us
         self.stage_dir = stage_dir
+        self.prefetch = prefetch  # PeerPrefetchFabric | None
+        self.max_retries = max_retries
         self.events: List[MigrationEvent] = []
         self._seq = 0
+        self._cores: Sequence[SimCore] = ()
+
+    def attach(self, cores: Sequence[SimCore]) -> None:
+        """Register the fleet and install the per-core rejection handler
+        that turns admission-deadline rejections of migrated continuations
+        into retries instead of drops."""
+        self._cores = list(cores)
+        for core in self._cores:
+            core.reject_hook = (
+                lambda c: lambda ev, rec, warm: self._handle_reject(
+                    c, ev, rec, warm
+                )
+            )(core)
+
+    # -- migration retry protocol -------------------------------------------
+    def _handle_reject(self, core, ev, rec, warm) -> bool:
+        """Re-route a rejected *continuation* (never a fresh arrival — load
+        shedding semantics are unchanged for work the cluster has not yet
+        executed) to the GPU holding its lingering working set, else its
+        original source, else the least-pressured GPU. Returns True when the
+        rejection was absorbed."""
+        meta = ev.meta
+        # only continuations carry "migrated_from" (steals preserve it); a
+        # stolen-but-never-executed fresh arrival must still shed normally
+        if "migrated_from" not in meta:
+            return False
+        tid = ev.program.task_id
+        retries = int(meta.get("mig_retries", 0))
+        candidates = [c for c in self._cores if c is not core]
+        if retries >= self.max_retries or not candidates:
+            if self.prefetch is not None:
+                self.prefetch.release(tid)  # drop the stranded linger copy
+            return False
+        entry = (
+            self.prefetch.directory.get(tid)
+            if self.prefetch is not None
+            else None
+        )
+        target = None
+        if entry is not None:
+            target = next(
+                (c for c in candidates if c.name == entry.src), None
+            )
+        if target is None:
+            src_name = meta.get("migrated_from")
+            target = next(
+                (c for c in candidates if c.name == src_name), None
+            )
+        if target is None:
+            target = min(candidates, key=self.pressure)
+        now = core.t
+        warm = self._retarget_linger(tid, target.name, warm)
+        target.inject(
+            TaskArrival(
+                now,
+                ev.program,
+                meta=dict(
+                    meta, mig_retries=retries + 1, retried_from=core.name
+                ),
+            ),
+            warm_runs=warm,
+        )
+        rec.meta["retried_to"] = target.name
+        self.events.append(
+            MigrationEvent(now, tid, core.name, target.name, "retry", 0, 0, now)
+        )
+        return True
+
+    def _retarget_linger(self, tid: int, dst_name: str, warm):
+        """Point a re-routed continuation's lingering peer copy at its new
+        target. The entry only stays in the directory when the new target
+        can actually peer-fetch it (a *different* GPU with a direct NVLink
+        edge to the source). Otherwise the copy is harvested into the warm
+        runs that travel with the task — back to the holder itself (the
+        task re-owns its pages at admission; a kept entry would keep
+        feeding them to cluster_view as foreign runs), or beyond NVLink
+        reach (host-staged with the re-route, the same convention as stolen
+        checkpoint warm runs — the simulation must not later re-materialize
+        data from a host DRAM that never held it). Returns the (possibly
+        augmented) warm runs."""
+        if self.prefetch is None:
+            return warm
+        entry = self.prefetch.directory.get(tid)
+        if entry is None:
+            return warm
+        if (
+            entry.src != dst_name
+            and self.topology.nvlink_peer(entry.src, dst_name) is not None
+        ):
+            self.prefetch.directory.retarget(tid, dst_name)
+            return warm
+        harvested = self.prefetch.harvest(tid)
+        if harvested:
+            warm = list(warm or []) + harvested
+        return warm
 
     def pressure(self, core: SimCore) -> float:
         st = core.state_view()
@@ -211,7 +340,10 @@ class Rebalancer:
             ev, rec, warm = stolen
             # a stolen candidate may itself be a migrated continuation whose
             # checkpointed working set was still waiting for admission: the
-            # warm runs travel with it (staged in host DRAM either way)
+            # warm runs travel with it (staged in host DRAM either way), and
+            # a lingering peer copy either follows the retarget (NVLink
+            # reachable) or is harvested into the warm runs
+            warm = self._retarget_linger(ev.program.task_id, dst.name, warm)
             dst.inject(
                 TaskArrival(
                     max(now, ev.time_us),
@@ -232,9 +364,18 @@ class Rebalancer:
         span = src.tasks[tid].prog.space.page_span()
         resident = resident_runs_in(src.pool, span)
         nbytes = run_page_count(resident) * src.page_size
+        if (
+            self.prefetch is not None
+            and self.topology.nvlink_peer(src.name, dst.name) is not None
+        ):
+            return self._move_lazy(src, dst, tid, resident, now)
         plan = self.topology.plan_transfer(src.name, dst.name, nbytes, now)
         if plan is None:
             return None
+        if self.prefetch is not None:
+            # a stale linger copy from an earlier visit elsewhere is dead
+            # the moment the task's live working set moves through host
+            self.prefetch.release(tid)
         ej = src.eject(tid, resident_runs=resident)
         warm = ej.resident_runs
         if self.stage_dir is not None:
@@ -254,6 +395,38 @@ class Rebalancer:
         return MigrationEvent(
             now, tid, src.name, dst.name, "checkpoint",
             run_page_count(ej.resident_runs), nbytes, plan.arrival_us,
+            completed_iters=ej.completed,
+        )
+
+    def _move_lazy(
+        self, src: SimCore, dst: SimCore, tid: int, resident, now: float
+    ) -> Optional[MigrationEvent]:
+        """Lazy NVLink migration: ship only the working-set manifest over
+        the peer edge; the pages linger on the source (eviction-list head —
+        free to scavenge) and the target's extended context switches
+        prefetch them peer-to-peer as the planner demands them."""
+        manifest = MANIFEST_BASE_BYTES + MANIFEST_RUN_BYTES * len(resident)
+        plan = self.topology.plan_transfer(src.name, dst.name, manifest, now)
+        if plan is None:
+            return None
+        self.prefetch.release(tid)  # stale copy from an earlier visit
+        ej = src.eject(tid, resident_runs=resident, linger=True)
+        if ej.record is not None:
+            ej.record.meta["migrated_to"] = dst.name
+        self.prefetch.directory.record(
+            tid, src.name, dst.name, resident, plan.arrival_us
+        )
+        cont = ResumedTask(ej.program, ej.completed)
+        dst.inject(
+            TaskArrival(
+                plan.arrival_us,
+                cont,
+                meta={"migrated_from": src.name, "transport": "nvlink-lazy"},
+            )
+        )
+        return MigrationEvent(
+            now, tid, src.name, dst.name, "p2p",
+            run_page_count(resident), manifest, plan.arrival_us,
             completed_iters=ej.completed,
         )
 

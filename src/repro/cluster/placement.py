@@ -27,9 +27,19 @@ from typing import List, Optional, Sequence
 from repro.core.migration import plan_population_runs
 from repro.core.simulator import SimState, active_demand_pages
 from repro.core.workloads import TaskProgram, footprint_pages
+from repro.cluster.topology import HOST, ClusterTopology
 
 
 class PlacementPolicy:
+    """Base class for arrival-dispatch policies.
+
+    ``simulate_cluster`` calls :meth:`place` once per trace arrival, the
+    moment the request arrives; the chosen core receives the program as a
+    normal ``TaskArrival`` (its own admission controller still decides
+    *when* the task actually starts). Policies may be stateful — one
+    instance drives one cluster run.
+    """
+
     name = "base"
 
     def place(
@@ -41,6 +51,9 @@ class PlacementPolicy:
 
 
 class RoundRobinPlacement(PlacementPolicy):
+    """Arrival order, no load awareness — the parity baseline: every GPU
+    gets every N-th request regardless of footprint or device capacity."""
+
     name = "roundrobin"
 
     def __init__(self) -> None:
@@ -73,16 +86,28 @@ class MSchedPlacement(PlacementPolicy):
     ``headroom`` mirrors the admission controller's: the fraction of HBM the
     packed working sets may claim. ``quantum_us`` defaults to each GPU's own
     scheduler quantum.
+
+    ``topology`` (optional; the engine wires it for NVLink-bearing fleets)
+    makes the landing-time tie-break *fluid-share aware*: a GPU whose host
+    link is currently carrying in-flight migrations or peer prefetches
+    would land the arrival's working set at a contended share of its PCIe
+    bandwidth, so its landing estimate is scaled by the live sharer count
+    (``ClusterTopology.active_on``). Peer-less fleets never set it, keeping
+    their placement decisions identical to the plain bin-packer.
     """
 
     name = "msched"
 
     def __init__(
-        self, headroom: float = 0.9, quantum_us: Optional[float] = None
+        self,
+        headroom: float = 0.9,
+        quantum_us: Optional[float] = None,
+        topology: Optional[ClusterTopology] = None,
     ):
         assert headroom > 0
         self.headroom = headroom
         self.quantum_us = quantum_us
+        self.topology = topology
 
     def _demand(self, st: SimState) -> int:
         quantum = self.quantum_us or getattr(st.policy, "quantum_us", 5_000.0)
@@ -100,10 +125,15 @@ class MSchedPlacement(PlacementPolicy):
                 # tightest feasible fit: filling the snuggest GPU first
                 # preserves the large contiguous headrooms for the large
                 # arrivals that have nowhere else to go (classic best-fit);
-                # ties go to the fastest-landing interconnect
+                # ties go to the fastest-landing interconnect, at the fluid
+                # share its host link would actually grant right now
                 land_us = plan_population_runs(
                     st.platform, [(0, cand)], 0, True, st.page_size
                 ).total_us
+                if self.topology is not None:
+                    land_us *= 1 + self.topology.active_on(
+                        core.name, HOST, arrival_us
+                    )
                 fits.append((free - cand, land_us, i))
             else:
                 # relative overload: a 2x-capacity device absorbs twice the
@@ -122,6 +152,9 @@ PLACEMENTS = {
 
 
 def make_placement(name_or_policy) -> PlacementPolicy:
+    """Resolve a policy: an instance passes through (callers may pre-build
+    one with custom knobs), a name from :data:`PLACEMENTS` is constructed
+    with defaults. ``simulate_cluster`` accepts either form."""
     if isinstance(name_or_policy, PlacementPolicy):
         return name_or_policy
     return PLACEMENTS[name_or_policy]()

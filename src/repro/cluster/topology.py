@@ -21,9 +21,10 @@ root port — the first-order effect the paper's pipelined-migration analysis
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.hardware import Platform
+from repro.core.pages import PageRun, merge_runs, run_page_count, subtract_runs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +116,25 @@ class ClusterTopology:
     def link(self, a: str, b: str) -> Optional[Link]:
         return self._links.get(frozenset((a, b)))
 
+    def has_nvlink(self) -> bool:
+        """True when any peer (GPU↔GPU) edge exists. The cluster engine only
+        builds the peer-prefetch machinery for NVLink-bearing fleets, which
+        is what keeps peer-less topologies bit-for-bit with the plain
+        composition."""
+        return any(l.kind == "nvlink" for l in self._links.values())
+
+    def nvlink_peer(self, a: str, b: str) -> Optional[Link]:
+        """The direct peer edge between two GPUs, or ``None`` (host-staged)."""
+        link = self.link(a, b)
+        return link if link is not None and link.kind == "nvlink" else None
+
+    def active_on(self, a: str, b: str, at_us: float) -> int:
+        """Transfers still in flight on the ``a<->b`` link at ``at_us`` —
+        a read-only contention probe (no booking) for fluid-share-aware
+        placement and planning."""
+        ends = self._active.get(frozenset((a, b)), ())
+        return sum(1 for e in ends if e > at_us)
+
     def path(self, src: str, dst: str) -> List[Link]:
         """Direct peer edge when present, else host-staged two-hop path."""
         direct = self.link(src, dst)
@@ -178,6 +198,93 @@ class ClusterTopology:
         plan = TransferPlan(src, dst, nbytes, now, t, staged, legs)
         self.transfers.append(plan)
         return plan
+
+
+# --------------------------------------------------------------------------
+# Page-location directory
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LingerEntry:
+    """One migrated task whose working set still (partially) lives in a peer
+    GPU's HBM. ``runs`` is the directory's *hint* of what lingers on ``src``;
+    the source pool's live residency is always re-checked at fetch time (the
+    source may have evicted runs under its own pressure — those sub-runs
+    fall back to host DRAM)."""
+
+    task_id: int
+    src: str  # GPU whose HBM holds the lingering runs
+    dst: str  # GPU the task migrated to (where it will next run)
+    runs: List[PageRun]  # merged (sorted, disjoint)
+    arrival_us: float  # when the migration manifest lands on dst
+
+    def pages(self) -> int:
+        return run_page_count(self.runs)
+
+
+class PageDirectory:
+    """Cluster-wide map of *where a migrated task's resident runs live*.
+
+    The directory is the piece of shared state that turns per-GPU memory
+    managers into a cluster co-design: the migration planner consults it to
+    source a working set from a peer's HBM over NVLink instead of host DRAM,
+    and each GPU's coordinator consults it (via the engine's fleet view) to
+    keep lingering runs that a *peer* needs soon out of the local eviction
+    head — Belady-OPT over the cluster-wide next-use timeline.
+
+    One entry per task (a task's working set lingers on at most one GPU —
+    re-migration reclaims the old copy first). Entries are hints: residency
+    truth stays in the owning pool."""
+
+    def __init__(self) -> None:
+        self._entries: Dict[int, LingerEntry] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def record(
+        self,
+        task_id: int,
+        src: str,
+        dst: str,
+        runs: Sequence[PageRun],
+        arrival_us: float,
+    ) -> LingerEntry:
+        entry = LingerEntry(task_id, src, dst, merge_runs(runs), arrival_us)
+        self._entries[task_id] = entry
+        return entry
+
+    def get(self, task_id: int) -> Optional[LingerEntry]:
+        return self._entries.get(task_id)
+
+    def forget(self, task_id: int) -> Optional[LingerEntry]:
+        return self._entries.pop(task_id, None)
+
+    def on_gpu(self, src: str) -> Iterator[LingerEntry]:
+        """Entries whose lingering runs live on ``src`` (the source GPU's
+        coordinator asks this to protect fleet-needed runs)."""
+        return (e for e in self._entries.values() if e.src == src)
+
+    def entries(self) -> List[LingerEntry]:
+        return list(self._entries.values())
+
+    def retarget(self, task_id: int, new_dst: str) -> None:
+        """A queued continuation was stolen/re-routed: its lingering runs
+        stay put, but the GPU that will fetch them changed."""
+        e = self._entries.get(task_id)
+        if e is not None:
+            e.dst = new_dst
+
+    def consume(self, task_id: int, fetched: Sequence[PageRun]) -> None:
+        """Drop fetched sub-runs from the hint (the peer copy moved to the
+        fetching GPU); an emptied entry is forgotten."""
+        e = self._entries.get(task_id)
+        if e is None:
+            return
+        e.runs = subtract_runs(e.runs, merge_runs(fetched))
+        if not e.runs:
+            self._entries.pop(task_id, None)
 
 
 def homogeneous(

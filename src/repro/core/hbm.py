@@ -226,6 +226,25 @@ class HBMPool:
                 n += hi - lo
         return n
 
+    def demote_runs(self, runs: Iterable[PageRun]) -> int:
+        """Move the resident pages of ``runs`` (which must be disjoint) to
+        the eviction-list *head* — the next victims. The inverse of
+        ``madvise``: demoted pages are scavengeable, reclaimed before any
+        protected page the moment the pool needs room. Pages end up at the
+        head in ascending run order (the same order the per-page reference —
+        ``move_to_front`` in reverse page order — produces). The cluster
+        layer demotes a migrated-away task's lingering working set so a peer
+        can prefetch it over NVLink while the local GPU loses nothing.
+        Returns #pages moved."""
+        frags: List[PageRun] = []
+        for a, b in runs:
+            frags.extend(self._extract(a, b))
+        for lo, hi in reversed(frags):
+            seg = _Seg(lo, hi)
+            self._link_after(seg, self._h)
+            self._index_insert(seg)
+        return sum(hi - lo for lo, hi in frags)
+
     def evict_head(self) -> int:
         seg = self._h.nxt
         if seg is self._t:
@@ -495,6 +514,19 @@ class HBMPoolPaged:
             for p in range(start, stop):
                 if p in lst:
                     lst.move_to_end(p)
+                    n += 1
+        return n
+
+    def demote_runs(self, runs: Iterable[PageRun]) -> int:
+        """Per-page reference of :meth:`HBMPool.demote_runs`: walking the
+        disjoint runs' pages in reverse and moving each to the front leaves
+        the demoted pages at the head in ascending run order."""
+        n = 0
+        lst = self._list
+        for start, stop in reversed(list(runs)):
+            for p in reversed(range(start, stop)):
+                if p in lst:
+                    lst.move_to_end(p, last=False)
                     n += 1
         return n
 

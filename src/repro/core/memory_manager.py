@@ -183,6 +183,23 @@ class Coordinator:
     futures (see ``repro.core.planner``); ``legacy=True`` selects the original
     rebuild-everything path, preserved for the sim-throughput benchmark and
     equivalence tests.
+
+    Two optional *cluster hooks* extend the extended context switch beyond
+    one GPU (both default to ``None``, in which case every code path is
+    byte-identical to the single-GPU coordinator):
+
+      * ``peer_source`` — called with ``(next_task, populated_runs,
+        evicted_pages, now)`` after the pool has admitted the population set;
+        may return a :class:`~repro.core.migration.TieredMigration` that
+        prices some populated runs from a peer GPU's HBM over NVLink instead
+        of host DRAM (the cluster's page-location directory decides which).
+      * ``cluster_view`` — called with ``now``; returns ``(next_use_us,
+        runs)`` pairs for *foreign* runs resident in this pool that the rest
+        of the fleet still needs (a migrated-away task's lingering working
+        set). The madvise walk merges them into the local timeline order by
+        next use, so the eviction list realizes Belady-OPT over the
+        **cluster-wide** timeline: the head holds the page the *fleet* needs
+        last, not merely the page this GPU needs last.
     """
 
     def __init__(
@@ -199,6 +216,9 @@ class Coordinator:
         self.page_size = page_size or platform.page_size
         self.legacy = legacy
         self.helpers: Dict[int, TaskHelper] = {}
+        # cluster hooks (see class docstring); None = single-GPU behavior
+        self.peer_source = None
+        self.cluster_view = None
         # cumulative stats
         self.total_madvise_us = 0.0
         self.total_migration_us = 0.0
@@ -214,8 +234,12 @@ class Coordinator:
         self.helpers.pop(task_id, None)
 
     def on_context_switch(
-        self, next_task: int, timeline: TaskTimeline
+        self, next_task: int, timeline: TaskTimeline, now: float = 0.0
     ) -> SwitchReport:
+        """Plan one extended context switch. ``now`` is the simulation clock
+        at the switch — only the cluster hooks consume it (peer-fetch
+        transfers share the link graph's contention bookkeeping, which is
+        keyed by absolute time); single-GPU callers may omit it."""
         if self.legacy:
             return self._on_context_switch_legacy(next_task, timeline)
         wall0 = time.perf_counter()
@@ -240,7 +264,7 @@ class Coordinator:
         # --- enforce OPT: walk the timeline in REVERSE, madvise to tail ----
         groups = run_groups(self.helpers, cuts)
         madvise_us = 0.0
-        for group in reversed(groups):
+        for group in self._opt_order(timeline, groups, now):
             if not group:
                 continue
             moved = self.pool.madvise_runs(group)
@@ -248,9 +272,44 @@ class Coordinator:
         # --- migrate: populate next task's immediate working set -----------
         # runs go straight through the driver: no page-list materialization
         populated_runs, evicted_runs = self.pool.migrate_runs(first_runs)
+        evicted_pages = run_page_count(evicted_runs)
+        if self.peer_source is not None and populated_runs:
+            tiered = self.peer_source(
+                next_task, populated_runs, evicted_pages, now
+            )
+            if tiered is not None:
+                return self._report(
+                    wall0, madvise_us, tiered,
+                    run_page_count(populated_runs), evicted_pages,
+                )
         return self._finish_switch_runs(
-            wall0, madvise_us, populated_runs, run_page_count(evicted_runs)
+            wall0, madvise_us, populated_runs, evicted_pages
         )
+
+    def _opt_order(
+        self, timeline: TaskTimeline, groups, now: float
+    ):
+        """Madvise order realizing OPT over the *cluster-wide* next-use
+        timeline: local timeline groups at their cumulative start offsets,
+        foreign lingering runs (``cluster_view``) at the fleet's next-use
+        estimate, all madvised furthest-future first so the final list tail
+        holds what is needed soonest — anywhere in the fleet. Without a
+        cluster view this degenerates to ``reversed(groups)`` exactly (the
+        per-GPU Belady walk)."""
+        foreign = (
+            self.cluster_view(now) if self.cluster_view is not None else None
+        )
+        if not foreign:
+            return reversed(groups)
+        sched: List[Tuple[float, int, List]] = []
+        off = 0.0
+        for entry, group in zip(timeline, groups):
+            sched.append((off, 0, group))
+            off += entry.timeslice_us
+        for next_use_us, runs in foreign:
+            sched.append((max(0.0, next_use_us - now), 1, runs))
+        sched.sort(key=lambda x: (x[0], x[1]))
+        return [g for _, _, g in reversed(sched)]
 
     def _on_context_switch_legacy(
         self, next_task: int, timeline: TaskTimeline

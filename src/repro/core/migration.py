@@ -137,6 +137,103 @@ class RunMigration:
         )
 
 
+@dataclasses.dataclass
+class PeerGroup:
+    """One peer-HBM source tier of a tiered migration: ``runs`` stream from
+    ``src`` (a peer GPU's HBM, over its direct NVLink edge) at
+    ``rate_bytes_per_us`` — the *fluid-share* rate the link graph granted the
+    fetch, so a contended edge prices slower. Ready times are linear fill in
+    population order, independent of the host-link pipeline (NVLink traffic
+    never touches the PCIe root port)."""
+
+    src: str
+    runs: List[PageRun]
+    rate_bytes_per_us: float
+
+    def page_count(self) -> int:
+        return run_page_count(self.runs)
+
+
+class CombinedReadyView:
+    """Max-composition of per-tier ready views: a command is ready when its
+    last page has landed, whichever tier carried it."""
+
+    def __init__(self, views: Sequence):
+        self._views = [v for v in views if v is not None]
+        self.global_max = max(
+            (v.global_max for v in self._views), default=float("-inf")
+        )
+
+    def max_ready(self, runs: Sequence[PageRun]) -> Optional[float]:
+        best = None
+        for v in self._views:
+            t = v.max_ready(runs)
+            if t is not None and (best is None or t > best):
+                best = t
+        return best
+
+
+@dataclasses.dataclass
+class TieredMigration:
+    """Migration plan whose populated pages come from multiple source tiers:
+    the *host* tier (standard pipelined D2H-evict/H2D-populate recurrence —
+    a :class:`RunMigration`) plus zero or more *peer-HBM* tiers
+    (:class:`PeerGroup`s fetched over NVLink). Exposes the same surface as
+    ``RunMigration`` (``total_us`` / ``populated_runs`` / ``ready_view``), so
+    ``SwitchReport.migration`` and the simulator are tier-agnostic."""
+
+    host: RunMigration
+    peers: List[PeerGroup]
+    page_size: int
+
+    @property
+    def evict_bytes(self) -> int:
+        return self.host.evict_bytes
+
+    @property
+    def peer_bytes(self) -> int:
+        return sum(g.page_count() for g in self.peers) * self.page_size
+
+    @property
+    def populate_bytes(self) -> int:
+        return self.host.populate_bytes + self.peer_bytes
+
+    @property
+    def populated_runs(self) -> List[PageRun]:
+        out = list(self.host.populated_runs)
+        for g in self.peers:
+            out.extend(g.runs)
+        return out
+
+    def _peer_times(self, g: PeerGroup) -> np.ndarray:
+        n = g.page_count()
+        return np.arange(1, n + 1, dtype=np.float64) * (
+            self.page_size / g.rate_bytes_per_us
+        )
+
+    @property
+    def total_us(self) -> float:
+        peer_last = max(
+            (float(self._peer_times(g)[-1]) for g in self.peers if g.page_count()),
+            default=0.0,
+        )
+        return max(self.host.total_us, peer_last)
+
+    def ready_view(self, base: float) -> Optional[CombinedReadyView]:
+        views = [self.host.ready_view(base)]
+        for g in self.peers:
+            times = self._peer_times(g)
+            if not len(times):
+                continue
+            views.append(
+                IndexReadyView(
+                    g.runs, lambda i, t=times: float(base + t[i]), len(times)
+                )
+            )
+        views = [v for v in views if v is not None]
+        return CombinedReadyView(views) if views else None
+
+
 def migrate_time_us(
     platform: Platform,
     evict_bytes: int,

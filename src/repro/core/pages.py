@@ -212,6 +212,49 @@ def pages_to_runs(pages: Sequence[int]) -> Tuple[PageRun, ...]:
     return tuple((s, e) for s, e in runs)
 
 
+def intersect_runs(
+    runs: Iterable[PageRun], other: Sequence[PageRun]
+) -> List[PageRun]:
+    """Sub-runs of ``runs`` covered by ``other`` (which must be sorted and
+    disjoint — e.g. a ``merge_runs`` result), preserving the order of
+    ``runs``. The run-level form of ``[p for p in pages if p in other]``."""
+    starts = [s for s, _ in other]
+    out: List[PageRun] = []
+    for a, b in runs:
+        i = max(0, bisect_right(starts, a) - 1)
+        while i < len(other) and other[i][0] < b:
+            s, e = other[i]
+            lo, hi = max(a, s), min(b, e)
+            if lo < hi:
+                out.append((lo, hi))
+            i += 1
+    return out
+
+
+def subtract_runs(
+    runs: Iterable[PageRun], remove: Sequence[PageRun]
+) -> List[PageRun]:
+    """Sub-runs of ``runs`` *not* covered by ``remove`` (sorted, disjoint),
+    preserving the order of ``runs`` — the order-preserving complement of
+    :func:`intersect_runs`."""
+    starts = [s for s, _ in remove]
+    out: List[PageRun] = []
+    for a, b in runs:
+        cur = a
+        i = bisect_right(starts, a) - 1
+        if i < 0 or remove[i][1] <= a:
+            i += 1
+        while cur < b and i < len(remove) and remove[i][0] < b:
+            s, e = remove[i]
+            if s > cur:
+                out.append((cur, s))
+            cur = max(cur, min(e, b))
+            i += 1
+        if cur < b:
+            out.append((cur, b))
+    return out
+
+
 def clip_runs(runs: Iterable[PageRun], max_pages: int) -> List[PageRun]:
     """First ``max_pages`` pages of ``runs`` in order (run-level equivalent
     of ``expand_runs(runs)[:max_pages]``)."""

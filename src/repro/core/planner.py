@@ -25,10 +25,17 @@ materialized into a classic ``OptPlan`` for equivalence testing against
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 from repro.core.opt import OptPlan
-from repro.core.pages import PageRun, RunSet, expand_runs, merge_runs
+from repro.core.pages import (
+    PageRun,
+    RunSet,
+    expand_runs,
+    intersect_runs,
+    merge_runs,
+    subtract_runs,
+)
 from repro.core.timeline import TaskTimeline
 
 # (task_id, start, end): future-queue index range consumed by one entry
@@ -132,6 +139,38 @@ def plan_switch(
     """Full incremental plan for one context switch."""
     cuts = compute_cuts(timeline, helpers)
     return RunPlan(cuts, run_groups(helpers, cuts), first_access_runs(helpers, cuts))
+
+
+def partition_source_tiers(
+    requested: Sequence[PageRun],
+    peer_candidate: Sequence[PageRun],
+    missing_on_peer: Callable[[List[PageRun]], List[PageRun]],
+) -> Tuple[List[PageRun], List[PageRun], List[PageRun]]:
+    """Split a migration's populate set by *source tier*.
+
+    ``requested`` is the switch's population set in first-access order;
+    ``peer_candidate`` is the sorted disjoint run set a peer GPU may still
+    hold (e.g. a migrated task's lingering working set from the cluster's
+    page-location directory); ``missing_on_peer`` is the peer pool's live
+    ``missing_runs`` — the directory is a hint, the pool is the truth.
+
+    Returns ``(peer, host, fresh)``, each order-preserving:
+
+      * **peer**  — lingered *and* still resident on the peer: fetchable over
+        NVLink at the link graph's fluid-share rate;
+      * **host**  — lingered but since evicted by the peer (the data went to
+        host DRAM): a host round-trip at PCIe rate — the fallback a source
+        GPU's mid-stream eviction forces;
+      * **fresh** — never part of the peer-held set (pages the task had not
+        materialized when it migrated): populated through the standard host
+        path, counted separately so the tier mix is observable.
+    """
+    avail = intersect_runs(requested, list(peer_candidate))
+    gone = merge_runs(missing_on_peer(avail)) if avail else []
+    peer = subtract_runs(avail, gone)
+    host = intersect_runs(avail, gone)
+    fresh = subtract_runs(requested, merge_runs(avail))
+    return peer, host, fresh
 
 
 def merged_command_runs(cmds, space) -> List[PageRun]:

@@ -169,7 +169,7 @@ class MSchedBackend(Backend):
         self.coordinator.unregister(task_id)
 
     def on_switch(self, task_id, timeline, now):
-        report = self.coordinator.on_context_switch(task_id, timeline)
+        report = self.coordinator.on_context_switch(task_id, timeline, now)
         self._migrated += report.populated_pages
         ctrl = 0.0 if self.control_free else report.madvise_us
         return ctrl, report.migration.ready_view(now + ctrl)
@@ -195,7 +195,7 @@ class IdealBackend(MSchedBackend):
     name = "ideal"
 
     def on_switch(self, task_id, timeline, now):
-        report = self.coordinator.on_context_switch(task_id, timeline)
+        report = self.coordinator.on_context_switch(task_id, timeline, now)
         self._migrated += report.populated_pages
         # population at the physically best per-direction rate: the duplex
         # ceiling is shared by concurrent eviction (swap = cap/2 each way,
@@ -775,6 +775,19 @@ class SimCore:
         self.used_task_ids = set(self.tasks)  # static ids + every id admitted
         self._warm_runs: Dict[int, List[PageRun]] = {}
 
+        # cluster hook: called with (ev, rec, warm_runs) when the admission
+        # controller rejects a queued candidate; returning True means the
+        # rejection was handled externally (e.g. the cluster re-routed a
+        # migrated continuation back to a GPU with headroom) and the record
+        # must NOT be marked rejected. None = single-GPU behavior.
+        self.reject_hook: Optional[
+            Callable[[TaskArrival, RequestRecord, Optional[List[PageRun]]], bool]
+        ] = None
+        # tasks ejected with linger=True: their working set stays resident
+        # (demoted to the eviction-list head) as a peer-prefetch source until
+        # reclaimed by pressure or reclaim_linger()
+        self.lingering: set = set()
+
         self.t = 0.0
         self.switches = 0
         self.control_us = 0.0
@@ -809,6 +822,7 @@ class SimCore:
         self,
         task_id: int,
         resident_runs: Optional[List[PageRun]] = None,
+        linger: bool = False,
     ) -> EjectedTask:
         """Forcibly remove an admitted task for migration: scheduler state,
         helper, and resident pages are torn down on this GPU, but the program
@@ -817,7 +831,13 @@ class SimCore:
         are iteration-granular). ``resident_runs`` lets a caller that already
         snapshotted the working set (to price the transfer before committing
         to the move) pass it through instead of recomputing it — it must be
-        current, i.e. no pool mutation since the snapshot."""
+        current, i.e. no pool mutation since the snapshot.
+
+        ``linger=True`` keeps the working set *resident* instead of freeing
+        it, demoted to the eviction-list head: the pages cost this GPU
+        nothing (they are the first victims under any pressure) but remain a
+        peer-prefetch source the migration target can pull over NVLink —
+        until local eviction or :meth:`reclaim_linger` takes them."""
         rt = self.tasks.pop(task_id)
         self.sched_cache = None
         self.backend.retire_task(task_id)
@@ -833,7 +853,11 @@ class SimCore:
             else resident_runs_in(self.pool, span)
         )
         self.pool.register_task(task_id, span)  # cover late allocations
-        self.pool.free_task(task_id)
+        if linger:
+            self.pool.demote_runs(resident)
+            self.lingering.add(task_id)
+        else:
+            self.pool.free_task(task_id)
         self._bank_stats(task_id, rt.stats)
         rec = self.rec_by_tid.get(task_id)
         if rec is not None:
@@ -845,6 +869,17 @@ class SimCore:
             resident_runs=resident,
             record=rec,
         )
+
+    def reclaim_linger(self, task_id: int) -> int:
+        """Free whatever remains of a lingered task's working set (the
+        cluster calls this when the migrated task finishes elsewhere, is
+        re-migrated, or the run ends). A no-op unless the task is actually
+        lingering here — a ping-ponged task that was re-admitted owns its
+        pages again and must not lose them. Returns pages reclaimed."""
+        if task_id not in self.lingering:
+            return 0
+        self.lingering.discard(task_id)
+        return self.pool.free_task(task_id)
 
     def steal_waiting(
         self,
@@ -886,6 +921,10 @@ class SimCore:
                 "existing task; ids must be unique across programs and events"
             )
         self.used_task_ids.add(prog.task_id)
+        # a ping-ponged task returning to a GPU where its old working set
+        # still lingers re-owns those pages through the normal span
+        # registration below
+        self.lingering.discard(prog.task_id)
         helper = self.backend.admit_task(prog)
         if helper is not None:
             self.helpers[prog.task_id] = helper
@@ -946,7 +985,13 @@ class SimCore:
             elif verdict == "reject":
                 self.waiting.popleft()
                 self._waiting_pages -= pages
-                self._warm_runs.pop(ev.program.task_id, None)
+                warm = self._warm_runs.pop(ev.program.task_id, None)
+                if self.reject_hook is not None and self.reject_hook(
+                    ev, rec, warm
+                ):
+                    # handled externally (re-routed); this fragment stays
+                    # unfinished — the target GPU's fragment completes it
+                    continue
                 rec.rejected = True
             else:
                 break

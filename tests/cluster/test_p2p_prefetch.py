@@ -1,0 +1,552 @@
+"""NVLink peer-to-peer working-set prefetch and cluster-wide OPT eviction:
+directory bookkeeping, source-tier pricing under link contention, host
+fallback after source-side eviction, the lazy p2p migration path, the
+migration retry protocol, and the peer-less bit-for-bit equivalence pin."""
+import pytest
+
+from repro.cluster import (
+    PageDirectory,
+    PeerPrefetchFabric,
+    PlacementPolicy,
+    Rebalancer,
+    ResumedTask,
+    homogeneous,
+    simulate_cluster,
+)
+from repro.cluster.topology import HOST
+from repro.core.hardware import NVLINK_A100_GBPS, RTX5080
+from repro.core.memory_manager import Coordinator
+from repro.core.migration import PeerGroup, TieredMigration, plan_population_runs
+from repro.core.pages import intersect_runs, run_page_count, subtract_runs
+from repro.core.planner import partition_source_tiers
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import AdmissionController, SimCore, TaskArrival
+from repro.core.timeline import TaskTimeline, TimelineEntry
+from repro.serving import (
+    MSchedAdmission,
+    Request,
+    ServedRequestTask,
+    poisson_trace,
+)
+
+ARCH = "qwen3-1.7b"
+PAGE = 1 << 20
+NV = NVLINK_A100_GBPS
+
+
+def _trace(rate=6.0, duration=1.5, seed=3, output_mean=24):
+    return poisson_trace(
+        rate, duration, seed=seed, tenants=(ARCH,), prompt_mean=64,
+        output_mean=output_mean, max_output=2 * output_mean,
+    )
+
+
+def _rec_tuple(r):
+    return (
+        r.task_id, r.arrival_us, r.admitted_us, r.first_iter_us,
+        r.finished_us, r.iterations_done, r.total_iterations, r.rejected,
+    )
+
+
+class Pin0(PlacementPolicy):
+    name = "pin0"
+
+    def place(self, prog, arrival_us, cores):
+        return 0
+
+
+def _serving_core(name, req_id=0, output_tokens=400, cap=4 << 30):
+    """One msched core with a single long-decoding request admitted."""
+    req = Request(req_id, ARCH, 1_000.0, prompt_tokens=64,
+                  output_tokens=output_tokens)
+    events = [
+        TaskArrival(req.arrival_us, ServedRequestTask(req_id, req, page_size=PAGE))
+    ]
+    return SimCore(
+        [], RTX5080, "msched", capacity_bytes=cap,
+        policy=RoundRobinPolicy(350_000.0), task_events=events,
+        page_size=PAGE, prepopulate=False, name=name,
+        profile_set=[ServedRequestTask(10_000_000 + req_id, req, page_size=PAGE)],
+    )
+
+
+# --------------------------------------------------------------------------
+# run helpers / directory bookkeeping
+# --------------------------------------------------------------------------
+
+
+def test_run_set_arithmetic():
+    runs = [(0, 10), (20, 30)]
+    other = [(5, 8), (25, 40)]
+    assert intersect_runs(runs, other) == [(5, 8), (25, 30)]
+    assert subtract_runs(runs, other) == [(0, 5), (8, 10), (20, 25)]
+    # order of the first argument is preserved
+    assert intersect_runs([(20, 30), (0, 10)], other) == [(25, 30), (5, 8)]
+
+
+def test_partition_source_tiers():
+    requested = [(0, 10), (20, 26)]
+    lingered = [(2, 8), (20, 30)]  # sorted disjoint
+    # the peer pool has since evicted (4, 6) and (22, 24)
+    missing = lambda runs: intersect_runs(runs, [(4, 6), (22, 24)])
+    peer, host, fresh = partition_source_tiers(requested, lingered, missing)
+    assert peer == [(2, 4), (6, 8), (20, 22), (24, 26)]
+    assert host == [(4, 6), (22, 24)]  # lingered but evicted: host round-trip
+    assert fresh == [(0, 2), (8, 10)]  # never lingered anywhere
+    total = run_page_count(peer) + run_page_count(host) + run_page_count(fresh)
+    assert total == run_page_count(requested)
+
+
+def test_page_directory_bookkeeping():
+    d = PageDirectory()
+    d.record(7, "gpu0", "gpu1", [(0, 10), (20, 30)], arrival_us=5.0)
+    assert d.get(7).pages() == 20
+    assert [e.task_id for e in d.on_gpu("gpu0")] == [7]
+    assert list(d.on_gpu("gpu1")) == []
+    d.retarget(7, "gpu2")
+    assert d.get(7).dst == "gpu2"
+    d.consume(7, [(0, 10)])
+    assert d.get(7).runs == [(20, 30)]
+    d.consume(7, [(20, 30)])  # emptied entries are forgotten
+    assert d.get(7) is None and len(d) == 0
+
+
+def test_demote_runs_head_order():
+    from repro.core.hbm import HBMPool
+
+    pool = HBMPool(16)
+    for p in range(8):
+        pool.populate(p)
+    pool.demote_runs([(2, 4), (6, 7)])
+    # demoted pages lead the eviction order, ascending run order
+    assert pool.eviction_order()[:3] == [2, 3, 6]
+    assert pool.resident_count() == 8
+
+
+# --------------------------------------------------------------------------
+# tiered migration pricing
+# --------------------------------------------------------------------------
+
+
+def test_tiered_migration_prices_peer_tier_at_nvlink_rate():
+    host = plan_population_runs(RTX5080, [(0, 64)], 0, True, PAGE)
+    rate = NV * 1e3  # bytes/us
+    tiered = TieredMigration(host, [PeerGroup("gpu1", [(100, 164)], rate)], PAGE)
+    assert tiered.populate_bytes == 128 * PAGE
+    assert tiered.peer_bytes == 64 * PAGE
+    view = tiered.ready_view(base=1000.0)
+    # last peer page lands after 64 pages at NVLink rate
+    peer_last = view.max_ready([(163, 164)])
+    assert peer_last == pytest.approx(1000.0 + 64 * PAGE / rate)
+    # host pages follow the standard pipelined recurrence (far slower)
+    host_last = view.max_ready([(63, 64)])
+    assert host_last == pytest.approx(1000.0 + host.times[-1])
+    assert peer_last < host_last
+    assert view.global_max == pytest.approx(max(peer_last, host_last))
+    assert tiered.total_us == pytest.approx(
+        max(host.total_us, 64 * PAGE / rate)
+    )
+
+
+def test_cluster_opt_order_merges_fleet_next_use():
+    """The madvise walk interleaves foreign lingering runs by fleet next-use:
+    runs a peer needs between local slices end up protected accordingly, and
+    without a cluster view the order is exactly ``reversed(groups)``."""
+    from repro.core.hbm import HBMPool
+
+    coord = Coordinator(RTX5080, HBMPool(64), page_size=PAGE)
+    timeline = TaskTimeline([TimelineEntry(0, 100.0), TimelineEntry(1, 100.0)])
+    groups = [[(0, 4)], [(8, 12)]]
+    assert list(coord._opt_order(timeline, groups, now=0.0)) == [
+        [(8, 12)], [(0, 4)],
+    ]
+    # foreign runs needed at +50us (between the two local slices) are
+    # madvised between them: protected more than slice 2, less than slice 1
+    coord.cluster_view = lambda now: [(now + 50.0, [(20, 24)])]
+    assert list(coord._opt_order(timeline, groups, now=1_000.0)) == [
+        [(8, 12)], [(20, 24)], [(0, 4)],
+    ]
+    # foreign runs the fleet needs *last* are the first madvised (least
+    # protected -> nearest the eviction head)
+    coord.cluster_view = lambda now: [(now + 500.0, [(20, 24)])]
+    assert list(coord._opt_order(timeline, groups, now=1_000.0)) == [
+        [(20, 24)], [(8, 12)], [(0, 4)],
+    ]
+
+
+# --------------------------------------------------------------------------
+# peer fetch through the fabric: pricing, contention, fallback
+# --------------------------------------------------------------------------
+
+
+def _linger_pair(cap_src=4 << 30):
+    """src core with an ejected-but-lingering task; dst core idle; fabric
+    wired over a 2-GPU NVLink topology."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=cap_src, nvlink_gbps=NV)
+    src = _serving_core("gpu0", req_id=0)
+    dst = _serving_core("gpu1", req_id=1, output_tokens=4)
+    src.run(200_000.0, final=False)
+    tid = next(iter(src.tasks))
+    ej = src.eject(tid, linger=True)
+    assert ej.resident_runs, "a running msched task has resident pages"
+    fabric = PeerPrefetchFabric(topo, [src, dst])
+    fabric.wire()
+    fabric.directory.record(tid, "gpu0", "gpu1", ej.resident_runs, 200_000.0)
+    return topo, src, dst, fabric, tid, ej
+
+
+def test_linger_keeps_pages_resident_and_scavengeable():
+    _, src, _, _, tid, ej = _linger_pair()
+    ws = run_page_count(ej.resident_runs)
+    assert src.pool.used == ws  # still resident (not freed)
+    assert tid in src.lingering
+    # demoted to the eviction-list head: the lingering pages are the first
+    # victims under any local pressure
+    head = src.pool.eviction_runs()[0]
+    assert intersect_runs([head], ej.resident_runs) == [head]
+    # reclaim is idempotent and guarded
+    assert src.reclaim_linger(tid) == ws
+    assert src.reclaim_linger(tid) == 0
+    assert src.pool.used == 0
+
+
+def test_peer_fetch_prices_nvlink_and_moves_pages():
+    topo, src, dst, fabric, tid, ej = _linger_pair()
+    ws = list(ej.resident_runs)
+    n = run_page_count(ws)
+    plan = fabric._plan_fetch(dst, tid, ws, 0, now=1_000.0)
+    assert isinstance(plan, TieredMigration)
+    [group] = plan.peers
+    assert group.src == "gpu0"
+    assert run_page_count(group.runs) == n
+    # uncontended NVLink edge: full fluid share
+    assert group.rate_bytes_per_us == pytest.approx(NV * 1e3, rel=1e-6)
+    # the copy moved: source pool drained, directory entry consumed, and the
+    # source's linger bookkeeping (flag + span) released with it
+    assert src.pool.used == 0
+    assert fabric.directory.get(tid) is None
+    assert tid not in src.lingering
+    assert tid not in src.pool._task_spans
+    [fetch] = fabric.fetches
+    assert fetch.pages == n and fetch.fallback_pages == 0
+    # host tier is empty: nothing left to pipeline over PCIe
+    assert plan.host.populate_bytes == 0
+
+
+def test_concurrent_prefetch_and_migration_share_one_nvlink_edge():
+    """A peer fetch planned while a migration transfer is in flight on the
+    same NVLink edge gets the halved fluid share — both consumers go through
+    one contention bookkeeping."""
+    topo, src, dst, fabric, tid, ej = _linger_pair()
+    nbytes = 1 << 30
+    mig = topo.plan_transfer("gpu0", "gpu1", nbytes, now=1_000.0)
+    assert mig is not None and not mig.staged
+    plan = fabric._plan_fetch(dst, tid, list(ej.resident_runs), 0, now=1_000.0)
+    [group] = plan.peers
+    assert group.rate_bytes_per_us == pytest.approx(NV * 1e3 / 2, rel=1e-6)
+    # and the fetch now occupies the edge too: a third transfer sees 3 sharers
+    probe = topo.plan_transfer("gpu0", "gpu1", nbytes, now=1_000.0)
+    dur = probe.arrival_us - probe.start_us
+    assert dur == pytest.approx(nbytes / (NV * 1e3 / 3), rel=1e-6)
+
+
+def test_peer_fetch_falls_back_to_host_when_source_evicted():
+    """Sub-runs the source GPU evicted after the manifest shipped take the
+    host-DRAM tier; a fully-evicted working set degrades to the plain host
+    migration (plan is None -> standard path)."""
+    topo, src, dst, fabric, tid, ej = _linger_pair()
+    ws = list(ej.resident_runs)
+    n = run_page_count(ws)
+    # local pressure on gpu0 scavenges half the lingering set mid-stream
+    lost = ws[: len(ws) // 2] or [ws[0]]
+    src.pool.drop_runs(lost)
+    n_lost = run_page_count(lost)
+    plan = fabric._plan_fetch(dst, tid, ws, 0, now=1_000.0)
+    assert isinstance(plan, TieredMigration)
+    [group] = plan.peers
+    assert run_page_count(group.runs) == n - n_lost
+    assert fabric.fallback_pages == n_lost
+    # the lost sub-runs ride the host pipeline instead
+    assert plan.host.populate_bytes == n_lost * PAGE
+    # source fully evicted -> no peer tier at all, caller takes host path
+    fabric.directory.record(tid, "gpu0", "gpu1", ws, 0.0)
+    src.pool.drop_runs(ws)
+    assert fabric._plan_fetch(dst, tid, ws, 0, now=2_000.0) is None
+    assert fabric.fallback_pages == n_lost + n
+    # evicted sub-runs are consumed from the hint too: a later switch
+    # re-requesting the same pages must not re-count the fallback
+    assert fabric.directory.get(tid) is None
+    assert fabric._plan_fetch(dst, tid, ws, 0, now=3_000.0) is None
+    assert fabric.fallback_pages == n_lost + n
+
+
+# --------------------------------------------------------------------------
+# end-to-end: lazy p2p migration through simulate_cluster
+# --------------------------------------------------------------------------
+
+
+def test_nvlink_cluster_lazy_migration_end_to_end():
+    """Skewed load on an NVLink pair: migrations ship manifests only
+    (kind "p2p"), the target's extended context switches peer-fetch the
+    working set, every request finishes, and no HBM leaks."""
+    rep = simulate_cluster(
+        _trace(rate=8.0, duration=2.0, output_mean=64),
+        homogeneous(2, RTX5080, capacity_bytes=3 << 30, nvlink_gbps=NV),
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE,
+        rebalance_period_us=250_000.0, rebalance_threshold=0.3,
+    )
+    p2p = [m for m in rep.migrations if m.kind == "p2p"]
+    assert p2p, "skewed NVLink fleet must use lazy p2p migration"
+    # manifests are metadata-sized, not working-set-sized
+    assert all(m.nbytes < 1 << 20 for m in p2p)
+    assert [m for m in p2p if m.pages > 0], "a running task's WS lingered"
+    assert rep.peer_fetches, "the target prefetched over NVLink"
+    assert rep.peer_fetch_bytes > 0
+    assert rep.stats.n_finished == rep.stats.n_requests
+    assert rep.merged.hbm_used_pages == 0  # linger copies reaped
+    tids = [r.task_id for r in rep.merged.requests]
+    assert len(tids) == len(set(tids))
+
+
+def test_peerless_topology_unaffected_by_peer_prefetch_flag():
+    """The tentpole's bit-for-bit pin: on a PCIe-only fleet the peer-prefetch
+    machinery is never constructed, so ``auto`` and ``off`` produce identical
+    results — including under rebalancing (bulk checkpoint moves)."""
+    kwargs = dict(
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE,
+        rebalance_period_us=200_000.0, rebalance_threshold=0.3,
+    )
+    a = simulate_cluster(
+        _trace(), homogeneous(2, RTX5080, capacity_bytes=4 << 30),
+        peer_prefetch="auto", **kwargs,
+    )
+    b = simulate_cluster(
+        _trace(), homogeneous(2, RTX5080, capacity_bytes=4 << 30),
+        peer_prefetch="off", **kwargs,
+    )
+    assert a.merged.sim_us == b.merged.sim_us
+    assert a.merged.switches == b.merged.switches
+    assert a.merged.control_us == b.merged.control_us
+    assert a.merged.migrated_bytes == b.merged.migrated_bytes
+    assert [_rec_tuple(r) for r in a.merged.requests] == [
+        _rec_tuple(r) for r in b.merged.requests
+    ]
+    assert [m.kind for m in a.migrations] == [m.kind for m in b.migrations]
+    assert not a.peer_fetches and not b.peer_fetches
+    # and bulk moves stay bulk on peer-less fleets
+    assert all(m.kind in ("steal", "checkpoint") for m in a.migrations)
+
+
+def test_nvlink_fleet_with_prefetch_off_uses_bulk_path():
+    rep = simulate_cluster(
+        _trace(rate=8.0, duration=2.0, output_mean=64),
+        homogeneous(2, RTX5080, capacity_bytes=3 << 30, nvlink_gbps=NV),
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE,
+        rebalance_period_us=250_000.0, rebalance_threshold=0.3,
+        peer_prefetch="off",
+    )
+    assert all(m.kind in ("steal", "checkpoint") for m in rep.migrations)
+    assert not rep.peer_fetches
+    assert rep.stats.n_finished == rep.stats.n_requests
+
+
+# --------------------------------------------------------------------------
+# migration retry protocol (ROADMAP open item)
+# --------------------------------------------------------------------------
+
+
+class RejectAll(AdmissionController):
+    def decide(self, prog, arrival_us, state):
+        return "reject"
+
+
+def test_rejected_continuation_returns_to_source_and_finishes():
+    """A migrated continuation rejected by the target's admission deadline
+    returns to the source instead of dropping its partially-executed work."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30)
+    src = _serving_core("gpu0", req_id=0, output_tokens=300)
+    dst = _serving_core("gpu1", req_id=1, output_tokens=2)
+    dst.admission = RejectAll()
+    rb = Rebalancer(topo)
+    rb.attach([src, dst])
+    src.run(200_000.0, final=False)
+    mv = rb._move_one(src, dst, 200_000.0)
+    assert mv is not None and mv.kind == "checkpoint"
+    assert 0 < mv.completed_iters < 300
+    # drive the target: it rejects the continuation, the handler bounces it
+    # back to the source, which completes the remaining iterations
+    dst.run(10_000_000.0, final=True)
+    src.run(20_000_000.0, final=True)
+    retries = [e for e in rb.events if e.kind == "retry"]
+    assert retries and retries[0].src == "gpu1" and retries[0].dst == "gpu0"
+    frags = [r for r in src.records + dst.records if r.task_id == 0]
+    assert not any(r.rejected for r in frags), "no fragment ends rejected"
+    assert any(r.finished_us is not None for r in frags)
+    assert sum(r.iterations_done for r in frags) == 300
+    dst_frag = next(r for r in dst.records if r.task_id == 0)
+    assert dst_frag.meta.get("retried_to") == "gpu0"
+
+
+def test_fresh_arrival_rejections_still_shed():
+    """Load shedding semantics are unchanged for work the cluster never
+    executed: a fresh arrival rejected by admission stays rejected."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30)
+    src = _serving_core("gpu0", req_id=0, output_tokens=4)
+    dst = _serving_core("gpu1", req_id=1, output_tokens=4)
+    src.admission = RejectAll()
+    rb = Rebalancer(topo)
+    rb.attach([src, dst])
+    src.run(10_000_000.0, final=True)
+    rec = next(r for r in src.records if r.task_id == 0)
+    assert rec.rejected
+    assert not [e for e in rb.events if e.kind == "retry"]
+    # a *stolen* fresh arrival (rerouted, never executed) also sheds: only
+    # "migrated_from" continuations get the retry protocol
+    req = Request(5, ARCH, 1_000.0, prompt_tokens=64, output_tokens=4)
+    dst.admission = RejectAll()
+    dst.inject(
+        TaskArrival(
+            dst.t + 1_000.0,
+            ServedRequestTask(5, req, page_size=PAGE),
+            meta={"rerouted_from": "gpu0"},
+        )
+    )
+    dst.run(dst.t + 10_000_000.0, final=True)
+    rec5 = next(r for r in dst.records if r.task_id == 5)
+    assert rec5.rejected
+    assert not [e for e in rb.events if e.kind == "retry"]
+
+
+class QueueAll(AdmissionController):
+    def decide(self, prog, arrival_us, state):
+        return "queue"
+
+
+def test_steal_beyond_nvlink_reach_harvests_linger_copy():
+    """A lazily-migrated continuation stolen onward to a GPU with no NVLink
+    edge to the linger source must carry its working set as warm runs (host
+    staged, like any stolen checkpoint) — the source copy is withdrawn, not
+    silently re-materialized from host DRAM later."""
+    from repro.cluster.topology import ClusterTopology, GPUNode
+
+    topo = ClusterTopology(
+        [GPUNode(f"gpu{i}", RTX5080, 4 << 30) for i in range(3)],
+        nvlinks=[("gpu0", "gpu1", NV)],  # partial mesh: gpu2 is PCIe-only
+    )
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=300)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    g2 = _serving_core("gpu2", req_id=2, output_tokens=2)
+    g1.admission = QueueAll()  # the continuation queues behind admission
+    fabric = PeerPrefetchFabric(topo, [g0, g1, g2])
+    fabric.wire()
+    rb = Rebalancer(topo, prefetch=fabric)
+    rb.attach([g0, g1, g2])
+    g0.run(200_000.0, final=False)
+    mv = rb._move_one(g0, g1, 200_000.0)
+    assert mv is not None and mv.kind == "p2p"
+    assert fabric.directory.get(0) is not None
+    linger_pages = g0.pool.used
+    assert linger_pages > 0
+    # the continuation lands and queues on gpu1; steal it onward to gpu2
+    g1.run(mv.arrival_us + 1_000.0, final=False)
+    assert g1.waiting, "continuation must be queued for the steal"
+    mv2 = rb._move_one(g1, g2, mv.arrival_us + 2_000.0)
+    assert mv2 is not None and mv2.kind == "steal" and mv2.dst == "gpu2"
+    # the linger copy was harvested: gone from gpu0, travels with the task
+    assert fabric.directory.get(0) is None
+    assert g0.pool.used == 0
+    g2.run(30_000_000.0, final=True)
+    g0.run(30_000_000.0, final=True)
+    rec = next(r for r in g2.records if r.task_id == 0)
+    assert rec.finished_us is not None
+    frags = [r for r in g0.records + g1.records + g2.records if r.task_id == 0]
+    assert sum(r.iterations_done for r in frags) == 300
+
+
+def test_steal_back_to_linger_holder_harvests_instead_of_retargeting():
+    """A continuation re-routed back to the GPU that holds its lingering
+    working set must not keep a directory entry (src == dst): the task
+    re-owns its pages at admission, and a stale entry would keep feeding
+    them to the holder's cluster_view as foreign runs on every switch."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=300)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    g1.admission = QueueAll()
+    fabric = PeerPrefetchFabric(topo, [g0, g1])
+    fabric.wire()
+    rb = Rebalancer(topo, prefetch=fabric)
+    rb.attach([g0, g1])
+    g0.run(200_000.0, final=False)
+    mv = rb._move_one(g0, g1, 200_000.0)
+    assert mv is not None and mv.kind == "p2p"
+    g1.run(mv.arrival_us + 1_000.0, final=False)
+    assert g1.waiting
+    mv2 = rb._move_one(g1, g0, mv.arrival_us + 2_000.0)
+    assert mv2 is not None and mv2.kind == "steal" and mv2.dst == "gpu0"
+    # harvested, not retargeted: no stale entry, no stale linger flag
+    assert fabric.directory.get(0) is None
+    assert 0 not in g0.lingering
+    g0.run(30_000_000.0, final=True)
+    frags = [r for r in g0.records + g1.records if r.task_id == 0]
+    assert sum(r.iterations_done for r in frags) == 300
+    assert any(r.finished_us is not None for r in frags)
+    # nothing foreign left for the holder's cluster view
+    assert fabric._make_cluster_view(g0)(g0.t) == []
+
+
+def test_deadline_rejections_never_lose_requests_end_to_end():
+    """With deadline admission + rebalancing on an NVLink fleet, every
+    request ends finished or rejected — retries bounced during the terminal
+    drain are re-drained, never silently dropped."""
+    rep = simulate_cluster(
+        _trace(rate=8.0, duration=2.0, output_mean=48),
+        homogeneous(2, RTX5080, capacity_bytes=3 << 30, nvlink_gbps=NV),
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(
+            headroom=0.9, max_wait_us=600_000.0
+        ),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE,
+        rebalance_period_us=250_000.0, rebalance_threshold=0.3,
+        drain_factor=12.0,
+    )
+    unresolved = [
+        r for r in rep.merged.requests
+        if r.finished_us is None and not r.rejected
+    ]
+    assert not unresolved, f"lost requests: {[r.task_id for r in unresolved]}"
+    assert rep.stats.n_finished + rep.stats.n_rejected == rep.stats.n_requests
+    assert rep.merged.hbm_used_pages == 0
+
+
+def test_retry_budget_bounds_ping_pong():
+    """A continuation every GPU rejects is eventually allowed to drop —
+    after max_retries bounces, not infinitely."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30)
+    src = _serving_core("gpu0", req_id=0, output_tokens=300)
+    dst = _serving_core("gpu1", req_id=1, output_tokens=2)
+    rb = Rebalancer(topo, max_retries=2)
+    rb.attach([src, dst])
+    src.run(200_000.0, final=False)
+    mv = rb._move_one(src, dst, 200_000.0)
+    assert mv is not None
+    # now *both* GPUs reject everything: the continuation bounces until the
+    # retry budget runs out, then the rejection stands
+    src.admission = RejectAll()
+    dst.admission = RejectAll()
+    for _ in range(6):
+        dst.run(dst.t + 1_000_000.0, final=False)
+        src.run(src.t + 1_000_000.0, final=False)
+    retries = [e for e in rb.events if e.kind == "retry"]
+    assert len(retries) == 2
+    frags = [r for r in src.records + dst.records if r.task_id == 0]
+    assert any(r.rejected for r in frags)

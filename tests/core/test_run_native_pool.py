@@ -64,7 +64,7 @@ def _check_op_sequence_equivalence(seed, capacity, n_pages, n_ops):
     a, b = HBMPool(capacity), HBMPoolPaged(capacity)
     spans = {}
     for step in range(n_ops):
-        op = rnd.randrange(8)
+        op = rnd.randrange(9)
         if op == 0:
             p = rnd.randrange(n_pages)
             assert a.populate(p) == b.populate(p)
@@ -99,12 +99,16 @@ def _check_op_sequence_equivalence(seed, capacity, n_pages, n_ops):
             p = rnd.randrange(n_pages)
             a.touch(p)
             b.touch(p)
-        else:
+        elif op == 7:
             runs = _rand_runs(rnd, n_pages)
             assert expand_runs(a.missing_runs(runs)) == expand_runs(
                 b.missing_runs(runs)
             )
             assert a.all_resident_runs(runs) == b.all_resident_runs(runs)
+        else:
+            # demote (linger scavenging): disjoint input per the contract
+            group = merge_runs(_rand_runs(rnd, n_pages))
+            assert a.demote_runs(group) == b.demote_runs(group)
         assert _pool_state(a) == _pool_state(b), (seed, step, op)
     assert list(a.iter_eviction()) == list(b.iter_eviction())
     assert expand_runs(a.eviction_runs()) == expand_runs(b.eviction_runs())
