@@ -30,6 +30,7 @@ MODULES = [
     "serve_oversub",
     "cluster_oversub",
     "p2p_prefetch",
+    "fault_recovery",
     "kernels_bench",
     "roofline_report",
 ]

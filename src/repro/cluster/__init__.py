@@ -17,6 +17,9 @@ The cluster subsystem composes N per-GPU simulation cores
     context switch, and cluster-wide OPT eviction;
   * :mod:`~repro.cluster.aggregate` — merge per-GPU results/records into
     cluster-wide goodput/TTFT/TPOT;
+  * :mod:`~repro.cluster.faults` — fault injection (GPU/link/task failures)
+    and the recovery runtime: checkpoint-based re-placement, linger-copy
+    harvesting, capped-backoff requeues, and graceful degradation;
   * :mod:`~repro.cluster.engine` — the ``simulate_cluster()`` entrypoint.
 """
 from repro.cluster.aggregate import (  # noqa: F401
@@ -29,6 +32,14 @@ from repro.cluster.engine import (  # noqa: F401
     ClusterReport,
     GPUReport,
     simulate_cluster,
+)
+from repro.cluster.faults import (  # noqa: F401
+    Checkpoint,
+    CheckpointVault,
+    FaultEvent,
+    FaultInjector,
+    FaultRuntime,
+    RecoveryEvent,
 )
 from repro.cluster.migration import (  # noqa: F401
     MigrationEvent,

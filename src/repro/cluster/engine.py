@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.core.invariants import InvariantAuditor
 from repro.core.scheduler import Policy, RoundRobinPolicy
 from repro.core.simulator import AdmissionController, SimCore, SimResult
 from repro.cluster.aggregate import (
@@ -32,6 +33,12 @@ from repro.cluster.aggregate import (
     merge_request_records,
     merge_sim_results,
     peak_concurrent_bytes,
+)
+from repro.cluster.faults import (
+    CheckpointVault,
+    FaultInjector,
+    FaultRuntime,
+    RecoveryEvent,
 )
 from repro.cluster.migration import MigrationEvent, Rebalancer
 from repro.cluster.placement import MSchedPlacement, PlacementPolicy, make_placement
@@ -89,6 +96,14 @@ class ClusterReport:
     peer_fetch_bytes: int = 0
     peer_fallback_pages: int = 0  # lingered pages lost to source eviction
     linger_reclaimed_pages: int = 0
+    # fault-injection accounting (zero/empty on fault-free runs)
+    faults_applied: int = 0
+    recoveries: List[RecoveryEvent] = dataclasses.field(default_factory=list)
+    shed_requests: int = 0  # graceful-degradation sheds
+    lost_requests: int = 0  # no alive GPU ever came back for these
+    retry_exhausted: int = 0  # continuations whose retry budget ran out
+    checkpoints: int = 0
+    checkpoint_bytes: int = 0
 
     def to_row(self) -> Dict[str, object]:
         """Flatten for JSON artifacts (benchmarks)."""
@@ -109,6 +124,18 @@ class ClusterReport:
             "peer_fetches": len(self.peer_fetches),
             "peer_fetch_bytes": self.peer_fetch_bytes,
             "peer_fallback_pages": self.peer_fallback_pages,
+            "faults_applied": self.faults_applied,
+            "recoveries": len(self.recoveries),
+            "recoveries_by_kind": {
+                k: sum(1 for r in self.recoveries if r.kind == k)
+                for k in ("checkpoint", "linger", "cold", "requeue")
+            },
+            "replayed_iters": sum(r.replayed_iters for r in self.recoveries),
+            "shed_requests": self.shed_requests,
+            "lost_requests": self.lost_requests,
+            "retry_exhausted": self.retry_exhausted,
+            "checkpoints": self.checkpoints,
+            "checkpoint_bytes": self.checkpoint_bytes,
             "per_gpu": [g.to_row() for g in self.per_gpu],
         }
         row.update(dataclasses.asdict(self.stats))
@@ -133,6 +160,13 @@ def simulate_cluster(
     stage_dir: Optional[str] = None,
     pool: str = "run",
     peer_prefetch: str = "auto",
+    faults: Optional[FaultInjector] = None,
+    recovery: str = "auto",
+    checkpoint_period_us: Optional[float] = None,
+    audit: bool = False,
+    shed_threshold: Optional[float] = 1.25,
+    shed_rt_threshold: Optional[float] = None,
+    retry_backoff_us: float = 0.0,
 ) -> ClusterReport:
     """Replay ``trace`` across the cluster and report fleet-level serving
     quality.
@@ -150,6 +184,22 @@ def simulate_cluster(
     ``msched``; ``"off"`` forces the plain composition (bulk transfers even
     over NVLink edges). Peer-less topologies and 1-GPU clusters behave
     identically under both settings — the machinery is never constructed.
+
+    ``faults`` injects a :class:`~repro.cluster.faults.FaultInjector`
+    schedule (GPU failures, link flaps, task crashes) as first-class
+    events; ``recovery`` picks the re-placement policy (``"auto"`` prefers
+    landed checkpoints, then linger copies, then cold restart; ``"cold"``
+    / ``"linger"`` / ``"checkpoint"`` pin a single source for ablations)
+    and ``checkpoint_period_us`` enables the periodic
+    :class:`~repro.cluster.faults.CheckpointVault` D2H snapshots that feed
+    it. ``shed_threshold`` / ``shed_rt_threshold`` bound graceful
+    degradation when failures shrink capacity. An empty or absent
+    ``faults`` constructs none of this machinery — fault-free runs are
+    bit-for-bit identical to the plain composition. ``audit=True`` runs
+    the read-only :class:`~repro.core.invariants.InvariantAuditor` at
+    every failure boundary and rebalance tick (raises on violation).
+    ``retry_backoff_us`` layers capped exponential delay onto the
+    migration retry protocol (0 keeps retries instant).
     """
     # lazy: serving depends on cluster.aggregate at module level; the
     # reverse edge must not exist at import time
@@ -215,6 +265,7 @@ def simulate_cluster(
             max_moves=max_moves_per_tick,
             stage_dir=stage_dir,
             prefetch=fabric,
+            retry_backoff_us=retry_backoff_us,
         )
         if rebalance_period_us
         else None
@@ -224,30 +275,77 @@ def simulate_cluster(
         rebalancer.attach(cores)
     placed = [0] * len(cores)
 
+    # fault machinery: constructed only for a non-empty schedule, so
+    # fault-free runs (faults=None or FaultInjector.none()) take exactly
+    # the plain code path — the structural bit-for-bit guarantee
+    fault_rt = None
+    vault = None
+    if faults is not None and not faults.empty:
+        if checkpoint_period_us:
+            vault = CheckpointVault(topology, page_size, stage_dir=stage_dir)
+        fault_rt = FaultRuntime(
+            faults,
+            topology,
+            cores,
+            placement,
+            fabric=fabric,
+            vault=vault,
+            recovery=recovery,
+            shed_threshold=shed_threshold,
+            shed_rt_threshold=shed_rt_threshold,
+        )
+    auditor = (
+        InvariantAuditor(cores, topology=topology, fabric=fabric, vault=vault)
+        if audit
+        else None
+    )
+
     # -- the cluster event loop --------------------------------------------
     try:
         ev_i = 0
         next_tick = rebalance_period_us if rebalancer else float("inf")
+        next_ck = (
+            checkpoint_period_us
+            if fault_rt is not None and checkpoint_period_us
+            else float("inf")
+        )
         while True:
             t_ev = events[ev_i].time_us if ev_i < len(events) else float("inf")
             t_tick = next_tick if next_tick <= horizon else float("inf")
-            T = min(t_ev, t_tick)
+            t_fault = fault_rt.next_time() if fault_rt else float("inf")
+            t_ck = next_ck if next_ck <= horizon else float("inf")
+            T = min(t_ev, t_tick, t_fault, t_ck)
             if T == float("inf"):
                 break
             for core in cores:
                 core.run(T, final=False)
-            if t_ev <= t_tick:
+            if t_fault <= T:
+                # failures first: a fault and an arrival at the same
+                # instant must not dispatch the arrival to the dying GPU
+                fault_rt.apply_due(T)
+                if auditor is not None:
+                    auditor.check(T, "fault")
+            elif t_ck <= T:
+                vault.snapshot(cores, T)
+                vault.prune(cores, fault_rt.live_extra())
+                next_ck += checkpoint_period_us
+            elif t_ev <= t_tick:
                 ev = events[ev_i]
                 ev_i += 1
-                gi = placement.place(ev.program, ev.time_us, cores)
-                cores[gi].inject(ev)
-                placed[gi] += 1
+                if fault_rt is not None:
+                    fault_rt.dispatch(ev)
+                else:
+                    gi = placement.place(ev.program, ev.time_us, cores)
+                    cores[gi].inject(ev)
+                    placed[gi] += 1
             else:
                 rebalancer.tick(cores, T)
                 if fabric is not None:
                     # lingering copies of finished tasks are garbage
                     fabric.reap()
                 next_tick += rebalance_period_us
+                if auditor is not None:
+                    auditor.check(T, "tick")
         while True:
             for core in cores:
                 core.run(horizon, final=True)
@@ -274,9 +372,22 @@ def simulate_cluster(
         # reclaim every remaining linger copy so end-of-run HBM accounting
         # balances (leak checks read pool.used)
         fabric.reap(final=True)
+    lost_records: List = []
+    if fault_rt is not None:
+        if vault is not None:
+            vault.prune(cores, fault_rt.live_extra())
+        # work the fleet could never re-place is accounted, not dropped
+        lost_records = fault_rt.drain_lost()
+        for i in range(len(placed)):
+            placed[i] += fault_rt.placed[i]
+    if auditor is not None:
+        auditor.check(horizon, "final")
 
     results = [core.result() for core in cores]
-    records = merge_request_records([r.requests for r in results])
+    records = merge_request_records(
+        [r.requests for r in results]
+        + ([lost_records] if lost_records else [])
+    )
     merged = merge_sim_results(results, records)
     window_us = max(trace.duration_us(), 1.0)
     stats = RequestStats.from_records(
@@ -310,4 +421,11 @@ def simulate_cluster(
         peer_fetch_bytes=fabric.peer_bytes() if fabric else 0,
         peer_fallback_pages=fabric.fallback_pages if fabric else 0,
         linger_reclaimed_pages=fabric.reclaimed_pages if fabric else 0,
+        faults_applied=len(fault_rt.applied) if fault_rt else 0,
+        recoveries=list(fault_rt.recoveries) if fault_rt else [],
+        shed_requests=len(fault_rt.shed_events) if fault_rt else 0,
+        lost_requests=fault_rt.lost if fault_rt else 0,
+        retry_exhausted=rebalancer.exhausted if rebalancer else 0,
+        checkpoints=vault.taken if vault else 0,
+        checkpoint_bytes=vault.bytes if vault else 0,
     )

@@ -69,14 +69,17 @@ class MigrationEvent:
     ``"checkpoint"`` (running task's working set bulk-transferred through
     the link graph), ``"p2p"`` (lazy NVLink move: only the manifest ships,
     ``nbytes`` is manifest bytes and ``pages`` the working set left
-    lingering on the source as a prefetch source), or ``"retry"`` (a
-    deadline-rejected continuation returned to a GPU with headroom)."""
+    lingering on the source as a prefetch source), ``"retry"`` (a
+    deadline-rejected continuation returned to a GPU with headroom), or
+    ``"exhausted"`` (the retry budget ran out: the continuation's rejection
+    stands, its linger copy and staging reservation are released, and the
+    request is accounted as failed)."""
 
     time_us: float
     task_id: int
     src: str
     dst: str
-    kind: str  # "steal" | "checkpoint" | "p2p" | "retry"
+    kind: str  # "steal" | "checkpoint" | "p2p" | "retry" | "exhausted"
     pages: int
     nbytes: int
     arrival_us: float  # when the task lands on dst
@@ -103,6 +106,10 @@ class ResumedTask(TaskProgram):
         self.space = inner.space
         self.name = f"{getattr(inner, 'name', 'task')}+mig{completed}"
         self.offset = completed
+        klass = getattr(inner, "slo_class", None)
+        if klass is not None:
+            # graceful degradation classifies continuations like originals
+            self.slo_class = klass
         total = getattr(inner, "total_iterations", None)
         self.total_iterations = (
             None if total is None else max(0, total - completed)
@@ -203,6 +210,8 @@ class Rebalancer:
         stage_dir: Optional[str] = None,
         prefetch=None,
         max_retries: int = 3,
+        retry_backoff_us: float = 0.0,
+        retry_backoff_cap_us: float = 400_000.0,
     ):
         assert threshold > 0
         self.topology = topology
@@ -212,9 +221,17 @@ class Rebalancer:
         self.stage_dir = stage_dir
         self.prefetch = prefetch  # PeerPrefetchFabric | None
         self.max_retries = max_retries
+        # retry bounce N lands at now + min(backoff * 2**N, cap); the 0.0
+        # default keeps retries instant (the PR 5 protocol)
+        self.retry_backoff_us = retry_backoff_us
+        self.retry_backoff_cap_us = retry_backoff_cap_us
+        self.exhausted = 0
         self.events: List[MigrationEvent] = []
         self._seq = 0
         self._cores: Sequence[SimCore] = ()
+        # host-staged checkpoint transfers still parked in host DRAM, by
+        # task id — released if the continuation's retry chain exhausts
+        self._staged_plans: Dict[int, object] = {}
 
     def attach(self, cores: Sequence[SimCore]) -> None:
         """Register the fleet and install the per-core rejection handler
@@ -242,10 +259,23 @@ class Rebalancer:
             return False
         tid = ev.program.task_id
         retries = int(meta.get("mig_retries", 0))
-        candidates = [c for c in self._cores if c is not core]
+        candidates = [c for c in self._cores if c is not core and not c.failed]
         if retries >= self.max_retries or not candidates:
             if self.prefetch is not None:
                 self.prefetch.release(tid)  # drop the stranded linger copy
+            plan = self._staged_plans.pop(tid, None)
+            if plan is not None:
+                # the checkpointed working set parked in host DRAM will
+                # never be consumed — release the staging reservation
+                self.topology.cancel_staging(plan)
+            self.exhausted += 1
+            rec.meta["retry_exhausted"] = True
+            self.events.append(
+                MigrationEvent(
+                    core.t, tid, core.name, core.name, "exhausted", 0, 0,
+                    core.t,
+                )
+            )
             return False
         entry = (
             self.prefetch.directory.get(tid)
@@ -265,10 +295,16 @@ class Rebalancer:
         if target is None:
             target = min(candidates, key=self.pressure)
         now = core.t
+        arrival = now
+        if self.retry_backoff_us > 0.0:
+            arrival = now + min(
+                self.retry_backoff_us * (2.0 ** retries),
+                self.retry_backoff_cap_us,
+            )
         warm = self._retarget_linger(tid, target.name, warm)
         target.inject(
             TaskArrival(
-                now,
+                arrival,
                 ev.program,
                 meta=dict(
                     meta, mig_retries=retries + 1, retried_from=core.name
@@ -278,7 +314,9 @@ class Rebalancer:
         )
         rec.meta["retried_to"] = target.name
         self.events.append(
-            MigrationEvent(now, tid, core.name, target.name, "retry", 0, 0, now)
+            MigrationEvent(
+                now, tid, core.name, target.name, "retry", 0, 0, arrival
+            )
         )
         return True
 
@@ -319,13 +357,16 @@ class Rebalancer:
 
     def tick(self, cores: Sequence[SimCore], now: float) -> List[MigrationEvent]:
         moves: List[MigrationEvent] = []
+        alive = [c for c in cores if not c.failed]
+        if len(alive) < 2:
+            return moves
         for _ in range(self.max_moves):
-            loads = [self.pressure(c) for c in cores]
-            si = max(range(len(cores)), key=lambda i: loads[i])
-            di = min(range(len(cores)), key=lambda i: loads[i])
+            loads = [self.pressure(c) for c in alive]
+            si = max(range(len(alive)), key=lambda i: loads[i])
+            di = min(range(len(alive)), key=lambda i: loads[i])
             if si == di or loads[si] - loads[di] < self.threshold:
                 break
-            mv = self._move_one(cores[si], cores[di], now)
+            mv = self._move_one(alive[si], alive[di], now)
             if mv is None:
                 break
             moves.append(mv)
@@ -386,6 +427,7 @@ class Rebalancer:
         if ej.record is not None:
             ej.record.meta["migrated_to"] = dst.name
         cont = ResumedTask(ej.program, ej.completed)
+        self._staged_plans[tid] = plan
         dst.inject(
             TaskArrival(
                 plan.arrival_us, cont, meta={"migrated_from": src.name}

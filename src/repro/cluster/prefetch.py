@@ -197,7 +197,9 @@ class PeerPrefetchFabric:
         landing time if still in flight — and never (``None`` → stay
         unprotected, reaped soon) once it finished or was shed."""
         dst = self.cores.get(entry.dst)
-        if dst is None:
+        if dst is None or dst.failed:
+            # a failed target's victims are resolved by the fault runtime at
+            # the failure boundary; anything still pointing at it is garbage
             return None
         rec = dst.rec_by_tid.get(entry.task_id)
         if rec is not None and (rec.finished_us is not None or rec.rejected):
@@ -236,6 +238,20 @@ class PeerPrefetchFabric:
         src.pool.drop_runs(live)
         src.reclaim_linger(task_id)  # clears the flag; nothing left to free
         return live or None
+
+    def drop_gpu(self, name: str) -> int:
+        """A GPU failed: every linger hint *on* it is void (the peer-HBM
+        copy vanished with the device — later fetches for those tasks fall
+        back to host DRAM, where the backing copy lives). Entries pointing
+        *at* the failed GPU (``dst``) are left alone: they are recovery
+        sources for its victims, resolved by the fault runtime. Returns the
+        number of entries dropped."""
+        dropped = 0
+        for entry in self.directory.entries():
+            if entry.src == name:
+                self.directory.forget(entry.task_id)
+                dropped += 1
+        return dropped
 
     # -- lifecycle -----------------------------------------------------------
     def release(self, task_id: int) -> int:

@@ -105,6 +105,10 @@ class ClusterTopology:
         self._staged: List[Tuple[float, float, int]] = []
         self.transfers: List[TransferPlan] = []
         self.deferred = 0  # transfers denied by the host DRAM budget
+        # fault injection: link key -> bandwidth factor (absent = healthy);
+        # 0.0 takes an NVLink edge down entirely (traffic re-routes through
+        # host staging)
+        self._degraded: Dict[FrozenSet[str], float] = {}
 
     def _add(self, link: Link) -> None:
         self._links[link.key()] = link
@@ -116,6 +120,13 @@ class ClusterTopology:
     def link(self, a: str, b: str) -> Optional[Link]:
         return self._links.get(frozenset((a, b)))
 
+    def links(self) -> List[Link]:
+        return list(self._links.values())
+
+    def link_factor(self, key: FrozenSet[str]) -> float:
+        """Current bandwidth factor of a link (1.0 = healthy, 0.0 = down)."""
+        return self._degraded.get(key, 1.0)
+
     def has_nvlink(self) -> bool:
         """True when any peer (GPU↔GPU) edge exists. The cluster engine only
         builds the peer-prefetch machinery for NVLink-bearing fleets, which
@@ -124,9 +135,12 @@ class ClusterTopology:
         return any(l.kind == "nvlink" for l in self._links.values())
 
     def nvlink_peer(self, a: str, b: str) -> Optional[Link]:
-        """The direct peer edge between two GPUs, or ``None`` (host-staged)."""
+        """The direct peer edge between two GPUs, or ``None`` (host-staged).
+        A downed edge (``degrade(..., 0.0)``) does not count as a peer."""
         link = self.link(a, b)
-        return link if link is not None and link.kind == "nvlink" else None
+        if link is None or link.kind != "nvlink":
+            return None
+        return link if self.link_factor(link.key()) > 0.0 else None
 
     def active_on(self, a: str, b: str, at_us: float) -> int:
         """Transfers still in flight on the ``a<->b`` link at ``at_us`` —
@@ -136,9 +150,10 @@ class ClusterTopology:
         return sum(1 for e in ends if e > at_us)
 
     def path(self, src: str, dst: str) -> List[Link]:
-        """Direct peer edge when present, else host-staged two-hop path."""
+        """Direct peer edge when present (and not downed), else host-staged
+        two-hop path."""
         direct = self.link(src, dst)
-        if direct is not None:
+        if direct is not None and self.link_factor(direct.key()) > 0.0:
             return [direct]
         return [self._links[frozenset((src, HOST))],
                 self._links[frozenset((dst, HOST))]]
@@ -159,6 +174,47 @@ class ClusterTopology:
         self._staged.clear()
         self.transfers.clear()
         self.deferred = 0
+        self._degraded.clear()
+
+    # -- fault injection -----------------------------------------------------
+    def degrade(self, a: str, b: str, factor: float) -> None:
+        """Scale the ``a<->b`` link's bandwidth by ``factor`` (a flap or
+        partial lane failure). ``factor == 0`` takes the edge *down* —
+        NVLink edges only: peer traffic re-routes through host staging, but
+        a GPU's host link must always exist (a GPU with no PCIe path is a
+        failed GPU, which is a ``gpu_fail`` event, not a link event).
+        In-flight transfers keep their planned times (fluid-at-start); only
+        new plans see the factor."""
+        key = frozenset((a, b))
+        link = self._links.get(key)
+        if link is None:
+            raise ValueError(f"no link {a}<->{b}")
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError(f"degrade factor must be in [0, 1], got {factor}")
+        if factor == 0.0 and link.kind != "nvlink":
+            raise ValueError("only NVLink edges can go fully down")
+        if factor == 1.0:
+            self._degraded.pop(key, None)
+        else:
+            self._degraded[key] = factor
+
+    def restore(self, a: str, b: str) -> None:
+        """Undo :meth:`degrade` on the ``a<->b`` link."""
+        self._degraded.pop(frozenset((a, b)), None)
+
+    def cancel_staging(self, plan: TransferPlan) -> int:
+        """Drop a staged transfer's host-DRAM reservation before it drains
+        (a retry chain was exhausted, or a failure made the parked working
+        set unreachable — the bytes will never be consumed). Returns bytes
+        released (0 when the staging already drained)."""
+        if not plan.staged:
+            return 0
+        token = (plan.start_us, plan.arrival_us, plan.nbytes)
+        try:
+            self._staged.remove(token)
+        except ValueError:
+            return 0
+        return plan.nbytes
 
     def _sharers(self, key: FrozenSet[str], at_us: float) -> int:
         """This transfer plus every transfer still active on the link."""
@@ -189,13 +245,43 @@ class ClusterTopology:
         for link in path:
             key = link.key()
             share = self._sharers(key, t)
-            rate = link.gbps * 1e3 / share  # bytes/us
+            rate = link.gbps * self.link_factor(key) * 1e3 / share  # bytes/us
             t += nbytes / rate
             self._active[key].append(t)
             legs.append((f"{link.a}<->{link.b}", t))
         if staged:
             self._staged.append((now, t, nbytes))
         plan = TransferPlan(src, dst, nbytes, now, t, staged, legs)
+        self.transfers.append(plan)
+        return plan
+
+    def plan_restore(
+        self, dst: str, nbytes: int, now: float
+    ) -> Optional[TransferPlan]:
+        """Price re-landing ``nbytes`` that already sit in host DRAM (a
+        checkpoint restore, or a re-dispatched continuation's warm working
+        set) onto ``dst``: one host-link leg, with the bytes charged against
+        the staging budget until they land. A saturated budget defers the
+        restore (``None`` + a deferral count) — the caller backs off and
+        retries, or falls back to another recovery source. An empty payload
+        (a checkpoint of a task with nothing resident) lands instantly and
+        never touches the link or the staging ledger."""
+        if nbytes <= 0:
+            return TransferPlan(HOST, dst, 0, now, now, False, [])
+        in_use = self.host_staged_bytes(now)
+        if in_use + nbytes > self.host_dram_bytes:
+            self.deferred += 1
+            return None
+        link = self._links[frozenset((dst, HOST))]
+        key = link.key()
+        share = self._sharers(key, now)
+        rate = link.gbps * self.link_factor(key) * 1e3 / share
+        t = now + nbytes / rate
+        self._active[key].append(t)
+        plan = TransferPlan(
+            HOST, dst, nbytes, now, t, True, [(f"{link.a}<->{link.b}", t)]
+        )
+        self._staged.append((now, t, nbytes))
         self.transfers.append(plan)
         return plan
 

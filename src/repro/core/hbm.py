@@ -446,6 +446,20 @@ class HBMPool:
         self.freed_pages += freed
         return freed
 
+    def wipe(self) -> int:
+        """Release every resident page and every task registration at once
+        (device failure: HBM contents are gone). Counts as freed pages, not
+        evictions. Returns the number of pages released."""
+        freed = self._count
+        self._h.nxt = self._t
+        self._t.prev = self._h
+        self._starts.clear()
+        self._segs.clear()
+        self._count = 0
+        self._task_spans.clear()
+        self.freed_pages += freed
+        return freed
+
 
 class HBMPoolPaged:
     """Original per-page ``OrderedDict`` pool (the straightforward reference
@@ -619,6 +633,15 @@ class HBMPoolPaged:
             del lst[p]
         self.freed_pages += len(freed)
         return len(freed)
+
+    def wipe(self) -> int:
+        """Release everything at once (device failure); see
+        :meth:`HBMPool.wipe`."""
+        freed = len(self._list)
+        self._list.clear()
+        self._task_spans.clear()
+        self.freed_pages += freed
+        return freed
 
 
 def resident_runs_in(pool, span: PageRun) -> List[PageRun]:

@@ -418,6 +418,33 @@ class EjectedTask:
         return run_page_count(self.resident_runs)
 
 
+@dataclasses.dataclass
+class FailedTask:
+    """One running task lost to a device failure: the program (address space
+    intact — the backing data model lives in host DRAM, only the HBM cache
+    and execution state are gone), the iterations it had completed on this
+    visit, and its record fragment. The cluster re-places it from its newest
+    durable source (checkpoint > lingering peer copy > cold restart)."""
+
+    program: TaskProgram
+    completed: int
+    record: Optional[RequestRecord]
+
+
+@dataclasses.dataclass
+class FailureReport:
+    """Everything a failing core surrenders to the cluster: running tasks
+    (with their progress), queued-but-unadmitted candidates and not-yet-due
+    arrivals (both with any pending warm runs — those sit in host DRAM and
+    survive the device), and the page count the HBM wipe released."""
+
+    time_us: float
+    running: List[FailedTask]
+    waiting: List[Tuple[TaskArrival, RequestRecord, Optional[List[PageRun]]]]
+    pending: List[Tuple[TaskArrival, Optional[List[PageRun]]]]
+    lost_pages: int
+
+
 # --------------------------------------------------------------------------
 # Engine
 # --------------------------------------------------------------------------
@@ -792,6 +819,9 @@ class SimCore:
         self.switches = 0
         self.control_us = 0.0
         self.sched_cache: Optional[Dict[int, SchedTask]] = None
+        # device-failure state: a failed core refuses work (run() no-ops,
+        # inject() raises) until recover()
+        self.failed = False
 
         # purge degenerate zero-iteration static programs before the clock
         # starts
@@ -808,6 +838,11 @@ class SimCore:
         """Enqueue a future arrival. ``warm_runs`` (a migrated task's
         checkpointed working set) is populated into HBM at admission — the
         restore half of the transfer the cluster already priced."""
+        if self.failed:
+            raise RuntimeError(
+                f"cannot inject into failed core {self.name}; callers must "
+                "dispatch to an alive device"
+            )
         self.dynamic = True
         if self.pending and ev.time_us < self.pending[-1].time_us:
             self.pending = deque(
@@ -897,6 +932,79 @@ class SimCore:
         self._waiting_pages -= pages
         rec.meta["rerouted_us"] = self.t
         return ev, rec, self._warm_runs.pop(ev.program.task_id, None)
+
+    def fail(self, now: float) -> FailureReport:
+        """Device-failure teardown: every admitted task is torn down (stats
+        banked, record fragment stamped ``failed_us``), queued and pending
+        candidates are surrendered with their pending warm runs, lingering
+        peer copies evaporate with the HBM they lived in, and the pool is
+        wiped. The core refuses work until :meth:`recover`. Returns what the
+        cluster must re-place or account as lost."""
+        if self.failed:
+            raise RuntimeError(f"core {self.name} is already failed")
+        self.failed = True
+        self.sched_cache = None
+        self.t = max(self.t, now)
+        running: List[FailedTask] = []
+        for tid in list(self.tasks):
+            rt = self.tasks.pop(tid)
+            self.backend.retire_task(tid)
+            self.helpers.pop(tid, None)
+            # the id comes back when the victim is re-placed (possibly here,
+            # after recovery) — same convention as eject()
+            self.used_task_ids.discard(tid)
+            self._bank_stats(tid, rt.stats)
+            rec = self.rec_by_tid.get(tid)
+            if rec is not None:
+                rec.iterations_done = rt.stats.completions
+                rec.meta["failed_us"] = now
+            running.append(FailedTask(rt.prog, rt.stats.completions, rec))
+        waiting = []
+        for ev, rec, _pages in self.waiting:
+            rec.meta["failed_us"] = now
+            waiting.append(
+                (ev, rec, self._warm_runs.pop(ev.program.task_id, None))
+            )
+        self.waiting.clear()
+        self._waiting_pages = 0
+        pending = [
+            (ev, self._warm_runs.pop(ev.program.task_id, None))
+            for ev in self.pending
+        ]
+        self.pending.clear()
+        self._warm_runs.clear()
+        self.lingering.clear()
+        lost = self.pool.wipe()
+        return FailureReport(now, running, waiting, pending, lost)
+
+    def recover(self, now: float) -> None:
+        """Bring a failed device back empty-handed: HBM is cold, the queue
+        empty — the device simply starts taking work again."""
+        if not self.failed:
+            return
+        self.failed = False
+        self.t = max(self.t, now)
+
+    def shed_one_waiting(
+        self, pred: Callable[[TaskArrival], bool]
+    ) -> Optional[Tuple[TaskArrival, RequestRecord]]:
+        """Shed the *newest* queued candidate matching ``pred`` (graceful
+        degradation under shrunken fleet capacity; newest-first preserves
+        FIFO fairness for the older queue head, mirroring
+        :meth:`steal_waiting`). The record is marked rejected and any
+        pending warm runs are dropped. Returns the shed (event, record), or
+        ``None`` when nothing matches."""
+        for i in range(len(self.waiting) - 1, -1, -1):
+            ev, rec, pages = self.waiting[i]
+            if not pred(ev):
+                continue
+            del self.waiting[i]
+            self._waiting_pages -= pages
+            self._warm_runs.pop(ev.program.task_id, None)
+            rec.rejected = True
+            rec.meta["shed_us"] = self.t
+            return ev, rec
+        return None
 
     # -- lifecycle internals -------------------------------------------------
     def _state(self, now: float) -> SimState:
@@ -1041,7 +1149,10 @@ class SimCore:
         """Advance the clock to ``until_us`` (a timeslice in flight may
         overrun it, exactly as ``simulate()`` overruns its horizon). Returns
         the clock. Non-final runs stop — without consuming time — when the
-        core has nothing to do before the horizon."""
+        core has nothing to do before the horizon. A failed core holds its
+        clock still until recovered."""
+        if self.failed:
+            return self.t
         while self.t < until_us:
             if not self._step(until_us, final):
                 break

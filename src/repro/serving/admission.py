@@ -47,7 +47,10 @@ class MSchedAdmission(AdmissionController):
     may claim (< 1 reserves slack for mispredictions and the control plane;
     > 1 deliberately oversubscribes the *working sets*, betting on MSched's
     proactive swap). ``max_wait_us`` rejects requests queued longer than the
-    deadline (callers surface this as load shedding).
+    deadline (callers surface this as load shedding). ``be_headroom``
+    optionally holds best-effort ("be" SLO class) candidates to a tighter
+    budget than real-time ones, reserving slack for "rt" work under
+    degraded capacity.
     """
 
     def __init__(
@@ -55,9 +58,12 @@ class MSchedAdmission(AdmissionController):
         headroom: float = 0.9,
         max_wait_us: Optional[float] = None,
         quantum_us: Optional[float] = None,
+        be_headroom: Optional[float] = None,
     ):
         assert headroom > 0
+        assert be_headroom is None or 0 < be_headroom <= headroom
         self.headroom = headroom
+        self.be_headroom = be_headroom
         self.max_wait_us = max_wait_us
         self.quantum_us = quantum_us
         # diagnostics (per request, not per decide() call — queued candidates
@@ -89,7 +95,15 @@ class MSchedAdmission(AdmissionController):
         quantum = self.quantum_us or getattr(state.policy, "quantum_us", 5_000.0)
         demand = self._demand_pages(state, quantum)
         candidate = footprint_pages(prog, state.page_size)
-        if demand + candidate <= self.headroom * state.pool.capacity:
+        # best-effort work admits against the tighter be_headroom budget so
+        # that degraded fleets keep slack for real-time requests
+        headroom = self.headroom
+        if (
+            self.be_headroom is not None
+            and getattr(prog, "slo_class", "be") == "be"
+        ):
+            headroom = self.be_headroom
+        if demand + candidate <= headroom * state.pool.capacity:
             self.admitted += 1
             self._queued_ids.discard(prog.task_id)
             return "admit"

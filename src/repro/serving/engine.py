@@ -89,7 +89,7 @@ def build_events(
                 bytes_per_weight=bytes_per_weight,
             ),
             meta={"tenant": req.tenant, "prompt": req.prompt_tokens,
-                  "output": req.output_tokens},
+                  "output": req.output_tokens, "slo_class": req.slo_class},
         )
         for req in trace
     ]

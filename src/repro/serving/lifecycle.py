@@ -59,6 +59,7 @@ class ServedRequestTask(LLMDecodeTask):
             page_size=page_size,
         )
         self.request = request
+        self.slo_class = request.slo_class  # graceful-degradation class
         self.name = f"req{request.req_id}_{request.tenant}"
         self.total_iterations = request.output_tokens
         self._prefill_factor = max(

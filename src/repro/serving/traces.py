@@ -36,6 +36,9 @@ class Request:
     arrival_us: float
     prompt_tokens: int
     output_tokens: int
+    # SLO class: "rt" (real-time, shed last under degraded capacity) or
+    # "be" (best-effort, shed first). Default keeps old traces replayable.
+    slo_class: str = "be"
 
 
 @dataclasses.dataclass
@@ -116,11 +119,20 @@ def _finish(
     max_prompt: int,
     max_output: int,
     meta: Dict[str, object],
+    rt_fraction: float = 0.0,
 ) -> Trace:
     reqs = []
     for i, t_us in enumerate(arrivals_us):
         p, o = _sample_lengths(rnd, prompt_mean, output_mean, max_prompt, max_output)
-        reqs.append(Request(i, tenants[i % len(tenants)], t_us, p, o))
+        # draw the class only when classes are in play: the extra RNG pull
+        # would otherwise shift every later length sample and break golden
+        # pins on class-free traces
+        klass = (
+            "rt" if rt_fraction > 0.0 and rnd.random() < rt_fraction else "be"
+        )
+        reqs.append(
+            Request(i, tenants[i % len(tenants)], t_us, p, o, klass)
+        )
     return Trace(reqs, meta)
 
 
@@ -138,8 +150,12 @@ def poisson_trace(
     output_mean: int = 32,
     max_prompt: int = 2048,
     max_output: int = 256,
+    rt_fraction: float = 0.0,
 ) -> Trace:
-    """Memoryless arrivals: exponential inter-arrival times at ``rate_rps``."""
+    """Memoryless arrivals: exponential inter-arrival times at ``rate_rps``.
+    ``rt_fraction`` tags that share of requests real-time ("rt" SLO class,
+    protected by graceful degradation); 0 keeps the trace identical to
+    class-free generation."""
     rnd = random.Random(seed)
     arrivals: List[float] = []
     t = 0.0
@@ -153,6 +169,7 @@ def poisson_trace(
         arrivals, rnd, tenants, prompt_mean, output_mean, max_prompt, max_output,
         {"process": "poisson", "rate_rps": rate_rps, "duration_s": duration_s,
          "seed": seed},
+        rt_fraction=rt_fraction,
     )
 
 
@@ -166,6 +183,7 @@ def bursty_trace(
     output_mean: int = 32,
     max_prompt: int = 2048,
     max_output: int = 256,
+    rt_fraction: float = 0.0,
 ) -> Trace:
     """Gamma inter-arrivals with coefficient of variation ``cv`` (> 1 means
     burstier than Poisson at the same mean rate)."""
@@ -185,6 +203,7 @@ def bursty_trace(
         arrivals, rnd, tenants, prompt_mean, output_mean, max_prompt, max_output,
         {"process": "bursty", "rate_rps": rate_rps, "duration_s": duration_s,
          "cv": cv, "seed": seed},
+        rt_fraction=rt_fraction,
     )
 
 
@@ -199,6 +218,7 @@ def diurnal_trace(
     output_mean: int = 32,
     max_prompt: int = 2048,
     max_output: int = 256,
+    rt_fraction: float = 0.0,
 ) -> Trace:
     """A scaled-day replay: sinusoidal rate profile
     ``rate(t) = mean·(1 + amplitude·sin(2πt/period))`` realized by thinning a
@@ -223,6 +243,7 @@ def diurnal_trace(
         {"process": "diurnal", "mean_rate_rps": mean_rate_rps,
          "duration_s": duration_s, "amplitude": amplitude,
          "period_s": period_s or duration_s, "seed": seed},
+        rt_fraction=rt_fraction,
     )
 
 

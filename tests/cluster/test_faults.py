@@ -1,0 +1,676 @@
+"""Fault injection and recovery: the zero-fault bit-for-bit pin, GPU
+fail/recover lifecycles, checkpoint vs. linger vs. cold recovery sources,
+link flaps, task crashes, graceful degradation ordering, the retry-exhaustion
+accounting, the linger-lifecycle regression, and a seeded chaos sweep under
+the inline invariant auditor."""
+import pytest
+
+from repro.cluster import (
+    CheckpointVault,
+    FaultEvent,
+    FaultInjector,
+    FaultRuntime,
+    PeerPrefetchFabric,
+    PlacementPolicy,
+    Rebalancer,
+    homogeneous,
+    simulate_cluster,
+)
+from repro.cluster.topology import HOST
+from repro.core.hardware import NVLINK_A100_GBPS, RTX5080
+from repro.core.invariants import InvariantAuditor
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import AdmissionController, SimCore, TaskArrival
+from repro.serving import (
+    MSchedAdmission,
+    Request,
+    ServedRequestTask,
+    Trace,
+    poisson_trace,
+)
+
+ARCH = "qwen3-1.7b"
+PAGE = 1 << 20
+NV = NVLINK_A100_GBPS
+
+
+def _trace(rate=6.0, duration=1.5, seed=3, output_mean=24, rt_fraction=0.0):
+    return poisson_trace(
+        rate, duration, seed=seed, tenants=(ARCH,), prompt_mean=64,
+        output_mean=output_mean, max_output=2 * output_mean,
+        rt_fraction=rt_fraction,
+    )
+
+
+def _rec_tuple(r):
+    return (
+        r.task_id, r.arrival_us, r.admitted_us, r.first_iter_us,
+        r.finished_us, r.iterations_done, r.total_iterations, r.rejected,
+    )
+
+
+class Pin0(PlacementPolicy):
+    name = "pin0"
+
+    def place(self, prog, arrival_us, cores):
+        return 0
+
+
+def _serving_core(name, req_id=0, output_tokens=400, cap=4 << 30,
+                  slo_class="be"):
+    req = Request(req_id, ARCH, 1_000.0, prompt_tokens=64,
+                  output_tokens=output_tokens, slo_class=slo_class)
+    events = [
+        TaskArrival(req.arrival_us, ServedRequestTask(req_id, req, page_size=PAGE))
+    ]
+    return SimCore(
+        [], RTX5080, "msched", capacity_bytes=cap,
+        policy=RoundRobinPolicy(350_000.0), task_events=events,
+        page_size=PAGE, prepopulate=False, name=name,
+        profile_set=[ServedRequestTask(10_000_000 + req_id, req, page_size=PAGE)],
+    )
+
+
+def _runtime(events, topo, cores, fabric=None, vault=None, **kw):
+    frt = FaultRuntime(
+        FaultInjector(events), topo, cores, Pin0(), fabric=fabric,
+        vault=vault, **kw
+    )
+    return frt
+
+
+# --------------------------------------------------------------------------
+# event / injector basics
+# --------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(0.0, "meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(0.0, "gpu_fail")  # no gpu named
+    with pytest.raises(ValueError):
+        FaultEvent(0.0, "link_degrade")  # no link endpoints
+    with pytest.raises(ValueError):
+        FaultEvent(0.0, "link_degrade", link=("a", "b"), factor=1.5)
+    FaultEvent(0.0, "link_degrade", link=("a", "b"), factor=0.0)  # edge down ok
+
+
+def test_random_schedule_is_seeded_and_ordered():
+    topo = homogeneous(3, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    a = FaultInjector.random(topo, 3_000_000.0, seed=7, gpu_mtbf_us=500_000.0,
+                             link_mtbf_us=700_000.0, crash_mtbf_us=900_000.0)
+    b = FaultInjector.random(topo, 3_000_000.0, seed=7, gpu_mtbf_us=500_000.0,
+                             link_mtbf_us=700_000.0, crash_mtbf_us=900_000.0)
+    assert [(e.time_us, e.kind, e.gpu, e.link) for e in a.events] == [
+        (e.time_us, e.kind, e.gpu, e.link) for e in b.events
+    ]
+    assert a.events  # the rates above must actually produce faults
+    times = [e.time_us for e in a.events]
+    assert times == sorted(times)
+    # every fail is paired with a recover for the same device
+    fails = sum(1 for e in a.events if e.kind == "gpu_fail")
+    recovers = sum(1 for e in a.events if e.kind == "gpu_recover")
+    assert fails == recovers
+    # disabled fault classes stay disabled
+    quiet = FaultInjector.random(topo, 3_000_000.0, seed=7)
+    assert quiet.empty
+
+
+# --------------------------------------------------------------------------
+# the zero-fault equivalence pin (satellite: bit-for-bit guarantee)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+@pytest.mark.parametrize("pool", ["run", "paged"])
+def test_empty_injector_is_bit_for_bit_free(backend, pool):
+    """``faults=FaultInjector.none()`` constructs no fault machinery: the
+    run is bit-for-bit the plain composition, every backend, both pools."""
+    kw = dict(
+        backend=backend, placement="roundrobin",
+        policy_factory=lambda i: RoundRobinPolicy(
+            2_000.0 if backend == "um" else 350_000.0
+        ),
+        page_size=PAGE, pool=pool,
+    )
+    tr = _trace(rate=3.0, duration=0.8)
+    plain = simulate_cluster(
+        tr, homogeneous(2, RTX5080, capacity_bytes=3 << 30), **kw
+    )
+    pinned = simulate_cluster(
+        _trace(rate=3.0, duration=0.8),
+        homogeneous(2, RTX5080, capacity_bytes=3 << 30),
+        faults=FaultInjector.none(), **kw
+    )
+    a, b = plain.merged, pinned.merged
+    assert a.sim_us == b.sim_us
+    assert a.switches == b.switches
+    assert a.faults == b.faults
+    assert a.migrated_bytes == b.migrated_bytes
+    assert [_rec_tuple(r) for r in a.requests] == [
+        _rec_tuple(r) for r in b.requests
+    ]
+    assert pinned.faults_applied == 0 and not pinned.recoveries
+
+
+# --------------------------------------------------------------------------
+# GPU fail / recover lifecycle (engine-level)
+# --------------------------------------------------------------------------
+
+
+def test_gpu_failure_recovers_and_finishes_everything():
+    """gpu0 dies mid-trace and comes back: victims are re-placed on gpu1,
+    arrivals during the outage avoid the corpse, and — with a generous
+    drain — every request still ends finished, audited at every boundary."""
+    inj = FaultInjector([
+        FaultEvent(700_000.0, "gpu_fail", gpu="gpu0"),
+        FaultEvent(1_500_000.0, "gpu_recover", gpu="gpu0"),
+    ])
+    rep = simulate_cluster(
+        _trace(rate=2.0, duration=1.5, output_mean=200),
+        homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV),
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, faults=inj, audit=True, drain_factor=20.0,
+    )
+    assert rep.faults_applied == 2
+    assert rep.recoveries, "running victims must be re-placed"
+    assert all(ev.src == "gpu0" for ev in rep.recoveries)
+    assert rep.stats.n_finished == rep.stats.n_requests
+    assert rep.lost_requests == 0
+    assert rep.merged.hbm_used_pages == 0
+    # the outage is visible in the records it interrupted
+    failed_frags = [
+        r for g in rep.per_gpu for r in g.result.requests
+        if "failed_us" in r.meta
+    ]
+    assert failed_frags
+
+
+def test_whole_fleet_down_holds_then_flushes():
+    """Both GPUs dead: arrivals during the blackout are held (placement
+    never sees a corpse), then flushed when a device returns."""
+    inj = FaultInjector([
+        FaultEvent(100_000.0, "gpu_fail", gpu="gpu0"),
+        FaultEvent(100_000.0, "gpu_fail", gpu="gpu1"),
+        FaultEvent(700_000.0, "gpu_recover", gpu="gpu1"),
+    ])
+    rep = simulate_cluster(
+        _trace(rate=6.0, duration=0.6, output_mean=64),
+        homogeneous(2, RTX5080, capacity_bytes=4 << 30),
+        backend="msched", placement="leastloaded",
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, faults=inj, audit=True, drain_factor=30.0,
+    )
+    assert rep.stats.n_finished == rep.stats.n_requests
+    assert rep.lost_requests == 0
+    # everything ran on the survivor
+    assert rep.per_gpu[1].result.total_completions() > 0
+    redisp = [
+        r for g in rep.per_gpu for r in g.result.requests
+        if "redispatched_from" in r.meta or "recovered_from" in r.meta
+    ]
+    assert redisp
+
+
+def test_fleet_never_recovering_accounts_lost_work():
+    """The fleet dies and stays dead: interrupted work is accounted as
+    rejected — never silently dropped — and every request has a record."""
+    tr = _trace(rate=6.0, duration=0.6, output_mean=16)
+    inj = FaultInjector([
+        FaultEvent(150_000.0, "gpu_fail", gpu="gpu0"),
+        FaultEvent(150_000.0, "gpu_fail", gpu="gpu1"),
+    ])
+    rep = simulate_cluster(
+        tr, homogeneous(2, RTX5080, capacity_bytes=4 << 30),
+        backend="msched", placement="leastloaded",
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, faults=inj, audit=True,
+    )
+    assert rep.lost_requests > 0
+    assert {r.task_id for r in rep.merged.requests} == {
+        r.req_id for r in tr
+    }
+    unresolved = [
+        r for r in rep.merged.requests
+        if r.finished_us is None and not r.rejected
+    ]
+    assert not unresolved
+    assert any(r.meta.get("lost") for r in rep.merged.requests)
+
+
+# --------------------------------------------------------------------------
+# recovery sources: checkpoint > linger > cold
+# --------------------------------------------------------------------------
+
+
+def test_checkpoint_recovery_preserves_progress():
+    """With a vault, a GPU failure restores the victim from its newest
+    landed snapshot: the completed-iteration prefix is NOT replayed."""
+    # one multi-quantum request (snapshots only see tasks still running at
+    # a timeslice boundary) pinned to the GPU that will die mid-decode
+    tr = Trace([
+        Request(0, ARCH, 50_000.0, prompt_tokens=64, output_tokens=600),
+    ])
+    inj = FaultInjector([FaultEvent(600_000.0, "gpu_fail", gpu="gpu0")])
+    rep = simulate_cluster(
+        tr, homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV),
+        backend="msched", placement=Pin0(),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, faults=inj, recovery="checkpoint",
+        checkpoint_period_us=100_000.0, audit=True, drain_factor=80.0,
+    )
+    assert rep.checkpoints > 0 and rep.checkpoint_bytes > 0
+    cks = [ev for ev in rep.recoveries if ev.kind == "checkpoint"]
+    assert cks, f"expected checkpoint recoveries, got {rep.recoveries}"
+    assert cks[0].completed > 0, "progress must be preserved"
+    assert cks[0].dst == "gpu1"
+    assert rep.stats.n_finished == rep.stats.n_requests
+    # the restored continuation resumes at the snapshot's iteration count:
+    # across fragments the request replays only the post-snapshot suffix
+    frags = [
+        r for g in rep.per_gpu for r in g.result.requests if r.task_id == 0
+    ]
+    done = sum(r.iterations_done for r in frags)
+    lost_at_fail = next(
+        r.iterations_done for r in frags if "failed_us" in r.meta
+    )
+    assert done == 600 + (lost_at_fail - cks[0].completed)
+    assert done < 600 + lost_at_fail, "checkpoint restore must not full-replay"
+
+
+def test_linger_recovery_lands_on_the_holding_gpu():
+    """A lazily-migrated task dies with its working set still lingering on
+    the source peer (the NVLink edge went down right after the move, so the
+    continuation's fetches fell back to host and never consumed the copy):
+    recovery harvests the copy and re-places the task on the holder —
+    instantly, no host round-trip."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=300)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    fabric = PeerPrefetchFabric(topo, [g0, g1])
+    fabric.wire()
+    rb = Rebalancer(topo, prefetch=fabric)
+    rb.attach([g0, g1])
+    g0.run(200_000.0, final=False)
+    mv = rb._move_one(g0, g1, 200_000.0)
+    assert mv is not None and mv.kind == "p2p"
+    assert fabric.directory.get(0) is not None and g0.pool.used > 0
+    # the NVLink edge dies before the continuation's first switch: fetches
+    # fall back to host, the linger copy survives on gpu0 untouched
+    topo.degrade("gpu0", "gpu1", 0.0)
+    # the continuation lands and runs on gpu1 — then gpu1 dies too
+    g1.run(mv.arrival_us + 50_000.0, final=False)
+    assert 0 in g1.tasks
+    assert fabric.directory.get(0) is not None  # copy still on the holder
+    t_fail = g1.t
+    frt = _runtime(
+        [FaultEvent(t_fail, "gpu_fail", gpu="gpu1")], topo, [g0, g1],
+        fabric=fabric, recovery="linger",
+    )
+    frt.apply_due(t_fail)
+    lingers = [ev for ev in frt.recoveries if ev.kind == "linger"]
+    assert lingers and lingers[0].dst == "gpu0"
+    # harvested: no directory entry, no linger flag — admission re-owns
+    assert fabric.directory.get(0) is None
+    assert 0 not in g0.lingering
+    InvariantAuditor([g0, g1], topology=topo, fabric=fabric).check(
+        t_fail, "post-fail"
+    )
+    g0.run(60_000_000.0, final=True)
+    frags = [r for r in g0.records + g1.records if r.task_id == 0]
+    assert any(r.finished_us is not None for r in frags)
+
+
+def test_cold_restart_replays_from_scratch():
+    """``recovery="cold"`` ignores durable sources: the victim restarts at
+    iteration 0 and the lost progress is the recovery event's replay cost."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=200)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    g0.run(300_000.0, final=False)
+    done_before = g0.tasks[0].stats.completions
+    assert done_before > 0
+    frt = _runtime(
+        [FaultEvent(g0.t, "gpu_fail", gpu="gpu0")], topo, [g0, g1],
+        recovery="cold",
+    )
+    frt.apply_due(g0.t)
+    colds = [ev for ev in frt.recoveries if ev.kind == "cold"]
+    assert colds and colds[0].replayed_iters == done_before
+    assert colds[0].dst == "gpu1"
+    g1.run(60_000_000.0, final=True)
+    frags = [r for r in g0.records + g1.records if r.task_id == 0]
+    assert sum(r.iterations_done for r in frags) == 200 + done_before
+    assert any(r.finished_us is not None for r in frags)
+
+
+def test_denied_restore_backs_off_then_degrades():
+    """A checkpoint restore denied by a saturated staging budget requeues
+    with growing capped backoff; once the retry budget is spent the victim
+    degrades to a cold restart instead of spinning forever."""
+    # host DRAM too small for any restore leg: every plan_restore denies
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30,
+                       host_dram_bytes=PAGE // 2)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=300)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    vault = CheckpointVault(topo, PAGE)
+    g0.run(250_000.0, final=False)
+    vault.snapshot([g0, g1], g0.t)
+    assert vault.taken >= 1
+    # fail only after the snapshot's D2H leg lands (an unlanded checkpoint
+    # is not restorable and recovery would degrade straight to cold)
+    t0 = vault._by_task[0][-1].ready_us + 1_000.0
+    frt = _runtime(
+        [FaultEvent(t0, "gpu_fail", gpu="gpu0")], topo, [g0, g1],
+        vault=vault, recovery="checkpoint",
+        backoff_us=10_000.0, backoff_cap_us=40_000.0,
+        max_recovery_retries=3,
+    )
+    t = t0
+    while frt.next_time() < float("inf"):
+        t = max(t, frt.next_time())
+        frt.apply_due(t)
+    requeues = [ev for ev in frt.recoveries if ev.kind == "requeue"]
+    assert len(requeues) == 3
+    # capped exponential: 10ms, 20ms, then the 40ms cap
+    gaps = [ev.arrival_us - ev.time_us for ev in requeues]
+    assert gaps == [10_000.0, 20_000.0, 40_000.0]
+    assert frt.recoveries[-1].kind == "cold"
+    assert not frt._retryq
+
+
+# --------------------------------------------------------------------------
+# link faults and task crashes
+# --------------------------------------------------------------------------
+
+
+def test_link_degrade_slows_transfers_and_restore_heals():
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    nbytes = 1 << 30
+    healthy = topo.plan_transfer("gpu0", "gpu1", nbytes, 0.0)
+    topo.reset_transfers()
+    topo.degrade("gpu0", "gpu1", 0.25)
+    degraded = topo.plan_transfer("gpu0", "gpu1", nbytes, 0.0)
+    assert degraded.arrival_us == pytest.approx(4 * healthy.arrival_us)
+    topo.restore("gpu0", "gpu1")
+    topo.reset_transfers()
+    healed = topo.plan_transfer("gpu0", "gpu1", nbytes, 0.0)
+    assert healed.arrival_us == healthy.arrival_us
+
+
+def test_nvlink_edge_down_falls_back_to_host_path():
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    assert topo.nvlink_peer("gpu0", "gpu1") is not None
+    topo.degrade("gpu0", "gpu1", 0.0)  # edge down, not just slow
+    assert topo.nvlink_peer("gpu0", "gpu1") is None
+    path = topo.path("gpu0", "gpu1")
+    assert [(l.a, l.b) for l in path] == [("gpu0", HOST), ("gpu1", HOST)]
+    # host PCIe links refuse factor 0 — a GPU with no host path is a
+    # failed GPU, not a slow link
+    with pytest.raises(ValueError):
+        topo.degrade("gpu0", HOST, 0.0)
+    topo.restore("gpu0", "gpu1")
+    assert topo.nvlink_peer("gpu0", "gpu1") is not None
+
+
+def test_task_crash_kills_and_recovers_one_task():
+    inj = FaultInjector([
+        FaultEvent(300_000.0, "task_crash", task_id=0),
+    ])
+    # one long decode: multi-quantum, guaranteed to be switched in (and so
+    # crashable) at the fault instant
+    tr = Trace([Request(0, ARCH, 1_000.0, prompt_tokens=64, output_tokens=400)])
+    rep = simulate_cluster(
+        tr, homogeneous(2, RTX5080, capacity_bytes=4 << 30),
+        backend="msched", placement="leastloaded",
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, faults=inj, audit=True, sim_us=8_000_000.0,
+    )
+    assert rep.faults_applied == 1
+    assert len(rep.recoveries) == 1 and rep.recoveries[0].task_id == 0
+    crashed = [
+        r for g in rep.per_gpu for r in g.result.requests
+        if "crashed_us" in r.meta
+    ]
+    assert len(crashed) == 1 and crashed[0].task_id == 0
+    assert rep.stats.n_finished == rep.stats.n_requests
+
+
+# --------------------------------------------------------------------------
+# graceful degradation: shed best-effort before RT
+# --------------------------------------------------------------------------
+
+
+def test_shedding_takes_best_effort_before_rt():
+    """Half the fleet dies under queued load: the survivors shed queued
+    best-effort candidates first; RT requests are never shed at the default
+    (rt-protecting) thresholds."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=1 << 30)
+    cores = []
+    for name in ("gpu0", "gpu1"):
+        core = _serving_core(name, req_id={"gpu0": 0, "gpu1": 1}[name],
+                             output_tokens=200)
+        cores.append(core)
+    g0, g1 = cores
+    # queue a pile of mixed-class candidates behind gpu0's admission
+    for i, klass in enumerate(["be", "rt", "be", "rt", "be", "be"]):
+        req = Request(100 + i, ARCH, 10_000.0 + i, prompt_tokens=512,
+                      output_tokens=64, slo_class=klass)
+        g0.inject(TaskArrival(
+            req.arrival_us, ServedRequestTask(100 + i, req, page_size=PAGE),
+            meta={"slo_class": klass},
+        ))
+    g0.admission = type("QueueAll", (AdmissionController,), {
+        "decide": lambda self, prog, arrival_us, state: "queue"
+        if state.active else "admit"
+    })()
+    # past the first 350k-us timeslice: the second step boundary processes
+    # the queued arrivals through the admission controller
+    g0.run(400_000.0, final=False)
+    assert len(g0.waiting) >= 5
+    frt = _runtime(
+        [FaultEvent(g0.t, "gpu_fail", gpu="gpu1")], topo, [g0, g1],
+        shed_threshold=0.5,
+    )
+    frt.apply_due(g0.t)
+    assert frt.shed_events, "pressure above threshold must shed"
+    assert all(klass == "be" for _t, _tid, klass, _c in frt.shed_events)
+    # every shed landed on a record, and RT candidates survived the cut
+    shed_ids = {tid for _t, tid, _k, _c in frt.shed_events}
+    for rec in g0.records:
+        if rec.task_id in shed_ids:
+            assert rec.rejected and "shed_us" in rec.meta
+    waiting_ids = {ev.program.task_id for ev, _r, _p in g0.waiting}
+    assert {101, 103} <= waiting_ids, "rt requests must survive"
+
+
+def test_shed_rt_threshold_allows_rt_shedding_when_set():
+    topo = homogeneous(1, RTX5080, capacity_bytes=1 << 30)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=200)
+    for i, klass in enumerate(["rt", "rt", "rt"]):
+        req = Request(100 + i, ARCH, 10_000.0 + i, prompt_tokens=512,
+                      output_tokens=64, slo_class=klass)
+        g0.inject(TaskArrival(
+            req.arrival_us, ServedRequestTask(100 + i, req, page_size=PAGE),
+            meta={"slo_class": klass},
+        ))
+    g0.admission = type("QueueAll", (AdmissionController,), {
+        "decide": lambda self, prog, arrival_us, state: "queue"
+        if state.active else "admit"
+    })()
+    g0.run(400_000.0, final=False)
+    assert len(g0.waiting) >= 2
+    frt = _runtime([], topo, [g0], shed_threshold=0.1,
+                   shed_rt_threshold=0.1)
+    frt._shed_pressure(g0.t)
+    assert any(k == "rt" for _t, _tid, k, _c in frt.shed_events)
+
+
+# --------------------------------------------------------------------------
+# satellite: rebalancer retry exhaustion
+# --------------------------------------------------------------------------
+
+
+class RejectAll(AdmissionController):
+    def decide(self, prog, arrival_us, state):
+        return "reject"
+
+
+def test_retry_exhaustion_accounts_and_releases_reservations():
+    """A continuation every GPU rejects exhausts its retry budget: the
+    rejection stands, the exhaustion is counted and stamped on the record,
+    and the parked staging reservation + linger copy are released."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30)
+    src = _serving_core("gpu0", req_id=0, output_tokens=300)
+    dst = _serving_core("gpu1", req_id=1, output_tokens=2)
+    rb = Rebalancer(topo, max_retries=2)
+    rb.attach([src, dst])
+    src.run(200_000.0, final=False)
+    mv = rb._move_one(src, dst, 200_000.0)
+    assert mv is not None and mv.kind == "checkpoint"
+    # the checkpointed working set is parked in host staging until consumed
+    assert rb._staged_plans and topo.host_staged_bytes(200_001.0) > 0
+    src.admission = RejectAll()
+    dst.admission = RejectAll()
+    for _ in range(6):
+        dst.run(dst.t + 1_000_000.0, final=False)
+        src.run(src.t + 1_000_000.0, final=False)
+    assert rb.exhausted == 1
+    exhausted = [e for e in rb.events if e.kind == "exhausted"]
+    assert len(exhausted) == 1 and exhausted[0].task_id == 0
+    # the stranded reservation was cancelled, not leaked
+    assert not rb._staged_plans
+    assert topo.host_staged_bytes(200_001.0) == 0
+    frags = [r for r in src.records + dst.records if r.task_id == 0]
+    assert any(r.rejected and r.meta.get("retry_exhausted") for r in frags)
+
+
+def test_retry_backoff_spaces_bounces():
+    """``retry_backoff_us`` makes each bounce land later (capped), instead
+    of the default instant re-injection."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30)
+    src = _serving_core("gpu0", req_id=0, output_tokens=300)
+    dst = _serving_core("gpu1", req_id=1, output_tokens=2)
+    rb = Rebalancer(topo, max_retries=3, retry_backoff_us=50_000.0,
+                    retry_backoff_cap_us=80_000.0)
+    rb.attach([src, dst])
+    src.run(200_000.0, final=False)
+    assert rb._move_one(src, dst, 200_000.0) is not None
+    src.admission = RejectAll()
+    dst.admission = RejectAll()
+    for _ in range(8):
+        dst.run(dst.t + 1_000_000.0, final=False)
+        src.run(src.t + 1_000_000.0, final=False)
+    retries = [e for e in rb.events if e.kind == "retry"]
+    assert len(retries) == 3
+    gaps = [e.arrival_us - e.time_us for e in retries]
+    assert gaps == [50_000.0, 80_000.0, 80_000.0]  # 50, min(100, cap), cap
+
+
+# --------------------------------------------------------------------------
+# satellite: linger lifecycle vs in-flight retries
+# --------------------------------------------------------------------------
+
+
+def test_exhausted_retry_releases_linger_copy():
+    """When a lazily-migrated continuation's retries exhaust, the lingering
+    source copy is reclaimed — no orphaned LingerEntry, no leaked pages,
+    and no double-free when the source later reaps."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=300)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    fabric = PeerPrefetchFabric(topo, [g0, g1])
+    fabric.wire()
+    rb = Rebalancer(topo, prefetch=fabric, max_retries=0)
+    rb.attach([g0, g1])
+    g0.run(200_000.0, final=False)
+    mv = rb._move_one(g0, g1, 200_000.0)
+    assert mv is not None and mv.kind == "p2p"
+    assert fabric.directory.get(0) is not None and g0.pool.used > 0
+    # with a zero retry budget the very first rejection exhausts
+    g1.admission = RejectAll()
+    g1.run(mv.arrival_us + 1_000_000.0, final=False)
+    assert rb.exhausted == 1
+    assert fabric.directory.get(0) is None
+    assert 0 not in g0.lingering
+    assert g0.pool.used == 0, "linger pages must be reclaimed, not leaked"
+    # reaping again is a no-op, not a double-free
+    assert fabric.reap(final=True) == 0
+    InvariantAuditor([g0, g1], topology=topo, fabric=fabric).check(
+        g1.t, "post-exhaust"
+    )
+    g0.run(30_000_000.0, final=True)
+    g1.run(30_000_000.0, final=True)
+    frags = [r for r in g0.records + g1.records if r.task_id == 0]
+    assert any(r.rejected for r in frags)
+    assert g0.pool.used == 0 and g1.pool.used == 0
+
+
+def test_shed_waiting_task_releases_linger_copy():
+    """A queued continuation shed by graceful degradation releases its
+    lingering working set on the peer — shedding while the retry was in
+    flight must not strand the copy."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=300)
+    g1 = _serving_core("gpu1", req_id=1, output_tokens=2)
+    fabric = PeerPrefetchFabric(topo, [g0, g1])
+    fabric.wire()
+    rb = Rebalancer(topo, prefetch=fabric)
+    rb.attach([g0, g1])
+    g0.run(200_000.0, final=False)
+    mv = rb._move_one(g0, g1, 200_000.0)
+    assert mv is not None and mv.kind == "p2p"
+    # the continuation queues behind gpu1's admission (unconditionally:
+    # gpu1 is idle when it lands, so an active-gated stub would admit it)
+    g1.admission = type("QueueAll", (AdmissionController,), {
+        "decide": lambda self, prog, arrival_us, state: "queue"
+    })()
+    g1.run(mv.arrival_us + 1_000.0, final=False)
+    assert g1.waiting
+    frt = _runtime([], topo, [g0, g1], fabric=fabric, shed_threshold=0.0)
+    frt._shed_pressure(g1.t)
+    assert any(tid == 0 for _t, tid, _k, _c in frt.shed_events)
+    assert fabric.directory.get(0) is None
+    assert 0 not in g0.lingering and g0.pool.used == 0
+    InvariantAuditor([g0, g1], topology=topo, fabric=fabric).check(
+        g1.t, "post-shed"
+    )
+
+
+# --------------------------------------------------------------------------
+# seeded chaos: the auditor rides along
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5, 6])
+def test_chaos_schedule_keeps_invariants_and_accounting(seed):
+    """Random fail/flap/crash schedules with the inline auditor: zero
+    violations, and every request is accounted — finished, rejected, or
+    explicitly lost — with balanced HBM at the end."""
+    tr = _trace(rate=5.0, duration=0.8, seed=seed, output_mean=12)
+    topo = homogeneous(2, RTX5080, capacity_bytes=3 << 30, nvlink_gbps=NV)
+    inj = FaultInjector.random(
+        topo, 1_500_000.0, seed=seed,
+        gpu_mtbf_us=700_000.0, gpu_mttr_us=300_000.0,
+        link_mtbf_us=900_000.0, crash_mtbf_us=1_200_000.0,
+    )
+    rep = simulate_cluster(
+        tr, topo, backend="msched", placement="leastloaded",
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, faults=inj, audit=True,
+        checkpoint_period_us=200_000.0, drain_factor=25.0,
+    )
+    # audit=True raised on any violation; accounting must balance
+    assert {r.task_id for r in rep.merged.requests} == {
+        r.req_id for r in tr
+    }
+    unresolved = [
+        r for r in rep.merged.requests
+        if r.finished_us is None and not r.rejected
+    ]
+    assert not unresolved, f"unaccounted requests: {unresolved}"
+    assert rep.merged.hbm_used_pages == 0
