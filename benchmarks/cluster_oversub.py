@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import random
 import time
 from pathlib import Path
@@ -45,7 +44,13 @@ from repro.serving import (
     bursty_trace,
 )
 
-from benchmarks.common import MSCHED_Q
+from benchmarks.common import (
+    MSCHED_Q,
+    export_telemetry,
+    make_telemetry,
+    print_json,
+    write_json,
+)
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_cluster.json"
 TENANTS = ("qwen3-1.7b", "llama3.2-3b")
@@ -111,7 +116,12 @@ def run_bench(
     variants=POLICY_VARIANTS,
     drain_factor: float = 8.0,
     out_path: Optional[Path] = DEFAULT_OUT,
+    telemetry_path: Optional[Path] = None,
 ) -> Dict[str, object]:
+    # one traced run per invocation: the last policy variant at the
+    # smallest fleet (msched+mig in the full sweep — the variant whose
+    # migrations the trace is most interesting for)
+    tel = make_telemetry(telemetry_path)
     report: Dict[str, object] = {
         "benchmark": "cluster_oversub",
         "ratio": ratio,
@@ -148,6 +158,11 @@ def run_bench(
                 drain_factor=drain_factor,
                 rebalance_period_us=rebalance,
                 rebalance_threshold=0.4,
+                telemetry=(
+                    tel
+                    if tag == variants[-1][0] and n == gpu_counts[0]
+                    else None
+                ),
             )
             r = rep.to_row()
             r["wall_s"] = time.perf_counter() - t0
@@ -163,16 +178,16 @@ def run_bench(
         row["msched"]["goodput_per_s"] > row["leastloaded"]["goodput_per_s"]
         for row in report["sweep"]
     )
+    export_telemetry(tel, telemetry_path)
     if out_path is not None:
-        serializable = json.loads(json.dumps(report, default=str))
-        out_path.write_text(json.dumps(serializable, indent=2) + "\n")
+        write_json(out_path, report)
     return report
 
 
-def run():
+def run(telemetry_path=None):
     """benchmarks.run entry point (the {2,4} slice keeps the full-suite wall
     time reasonable; the standalone CLI sweeps {2,4,8})."""
-    report = run_bench(gpu_counts=(2, 4))
+    report = run_bench(gpu_counts=(2, 4), telemetry_path=telemetry_path)
     rows = []
     for row in report["sweep"]:
         ms = row["msched"]
@@ -200,6 +215,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     ap.add_argument(
+        "--telemetry", type=Path, default=None, metavar="out.trace",
+        help="export a Chrome trace of the last policy variant at the "
+        "smallest fleet size",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="fast CI config: 2 GPUs, short trace, packer-vs-leastloaded only",
     )
@@ -210,13 +230,14 @@ def main() -> None:
             duration_s=3.0, seed=args.seed, out_path=None,
             variants=[v for v in POLICY_VARIANTS if v[0] in
                       ("leastloaded", "msched")],
+            telemetry_path=args.telemetry,
         )
     else:
         report = run_bench(
             tuple(args.gpus), args.ratio, args.rate, args.duration,
-            args.seed, out_path=args.out,
+            args.seed, out_path=args.out, telemetry_path=args.telemetry,
         )
-    print(json.dumps(json.loads(json.dumps(report, default=str)), indent=2))
+    print_json(report)
     if not report["meets_target"]:
         raise SystemExit(
             "MSched-aware placement did not beat least-loaded under pressure"

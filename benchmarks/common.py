@@ -9,8 +9,10 @@ Calibration (validated against the paper, see EXPERIMENTS.md):
 """
 from __future__ import annotations
 
+import json
 import time
-from typing import Dict, List
+from pathlib import Path
+from typing import Dict, List, Optional
 
 from repro.core.hardware import RTX3080, RTX5080
 from repro.core.scheduler import PriorityPolicy, RoundRobinPolicy
@@ -66,6 +68,47 @@ def bench_combo(
         )
         out[b] = res
     return out
+
+
+def _json_default(obj):
+    """Artifact serialization: anything exposing ``to_json()`` (notably
+    ``ClusterReport``) serializes through it; other non-JSON leaves fall
+    back to ``str`` (the historical behavior every writer hand-rolled)."""
+    to_json = getattr(obj, "to_json", None)
+    if callable(to_json):
+        return to_json()
+    return str(obj)
+
+
+def write_json(path, payload: Dict[str, object]) -> None:
+    """The shared ``BENCH_*.json`` artifact writer."""
+    normalized = json.loads(json.dumps(payload, default=_json_default))
+    Path(path).write_text(json.dumps(normalized, indent=2) + "\n")
+
+
+def print_json(payload: Dict[str, object]) -> None:
+    print(json.dumps(
+        json.loads(json.dumps(payload, default=_json_default)), indent=2
+    ))
+
+
+def make_telemetry(telemetry_path: Optional[str]):
+    """Build a :class:`repro.telemetry.Telemetry` hub when a ``--telemetry``
+    path was given, else ``None`` (the benchmark runs untraced)."""
+    if telemetry_path is None:
+        return None
+    from repro.telemetry import Telemetry
+
+    return Telemetry()
+
+
+def export_telemetry(tel, telemetry_path) -> None:
+    """Write the hub's Chrome trace (load in Perfetto, or feed to
+    ``scripts/trace_report.py``). No-op when the benchmark ran untraced."""
+    if tel is None or telemetry_path is None:
+        return
+    tel.write_chrome(telemetry_path)
+    print(f"telemetry: wrote Chrome trace to {telemetry_path}")
 
 
 def timed(fn, *args, **kw):

@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import random
 import time
 from pathlib import Path
@@ -57,7 +56,13 @@ from repro.serving import (
     bursty_trace,
 )
 
-from benchmarks.common import MSCHED_Q
+from benchmarks.common import (
+    MSCHED_Q,
+    export_telemetry,
+    make_telemetry,
+    print_json,
+    write_json,
+)
 from benchmarks.p2p_prefetch import HotspotPlacement
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_faults.json"
@@ -120,9 +125,12 @@ def run_sweep(
     duration_s: float = 6.0,
     seed: int = 42,
     mtbfs_us: Sequence[float] = (500_000.0, 1_000_000.0, 2_000_000.0),
+    telemetry=None,
 ) -> Dict[str, object]:
     """Goodput vs MTBF for the three recovery arms on identical fault
-    timelines (same seeded schedule per MTBF, same trace, same fleet)."""
+    timelines (same seeded schedule per MTBF, same trace, same fleet).
+    ``telemetry`` (a hub) traces exactly one run — the full-recovery
+    ``ckpt+linger`` arm at the first MTBF point."""
     trace = build_trace(n_gpus, rate_per_gpu, duration_s, seed)
     foot = mean_request_footprint(trace)
     cap_per_gpu = int(TARGET_CONCURRENCY * foot / ratio)
@@ -171,6 +179,11 @@ def run_sweep(
                 recovery=mode,
                 shed_threshold=3.0,
                 checkpoint_period_us=ckpt_us,
+                telemetry=(
+                    telemetry
+                    if tag == "ckpt+linger" and mtbf == mtbfs_us[0]
+                    else None
+                ),
             )
             row = rep.to_row()
             row["wall_s"] = time.perf_counter() - t0
@@ -269,14 +282,18 @@ def run_bench(
     n_chaos: int = 25,
     out_path: Optional[Path] = DEFAULT_OUT,
     strict: bool = True,
+    telemetry_path: Optional[Path] = None,
 ) -> Dict[str, object]:
+    tel = make_telemetry(telemetry_path)
     report: Dict[str, object] = {
         "benchmark": "fault_recovery",
         "sweep": run_sweep(
-            n_gpus, ratio, rate_per_gpu, duration_s, seed, mtbfs_us
+            n_gpus, ratio, rate_per_gpu, duration_s, seed, mtbfs_us,
+            telemetry=tel,
         ),
         "chaos": run_chaos(n_schedules=n_chaos, base_seed=seed),
     }
+    export_telemetry(tel, telemetry_path)
     # acceptance: at every injected MTBF, both checkpoint-based arms beat
     # the cold-restart baseline on goodput, and the chaos suite is clean.
     # Smoke configs are too light to separate the arms (every request
@@ -294,14 +311,13 @@ def run_bench(
     report["chaos_clean"] = report["chaos"]["violations"] == 0
     report["meets_target"] = recovery_wins and report["chaos_clean"]
     if out_path is not None:
-        serializable = json.loads(json.dumps(report, default=str))
-        out_path.write_text(json.dumps(serializable, indent=2) + "\n")
+        write_json(out_path, report)
     return report
 
 
-def run():
+def run(telemetry_path=None):
     """benchmarks.run entry point."""
-    report = run_bench()
+    report = run_bench(telemetry_path=telemetry_path)
     rows = []
     for point in report["sweep"]["mtbf_points"]:
         for tag in ("cold", "checkpoint", "ckpt+linger"):
@@ -340,6 +356,11 @@ def main() -> None:
                     help="number of randomized audited fault schedules")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     ap.add_argument(
+        "--telemetry", type=Path, default=None, metavar="out.trace",
+        help="export a Chrome trace of the ckpt+linger arm at the first "
+        "MTBF (load in Perfetto, or run scripts/trace_report.py on it)",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="fast CI config: 2 GPUs, one MTBF, 3 audited chaos schedules, "
         "no artifact",
@@ -350,13 +371,15 @@ def main() -> None:
             n_gpus=2, ratio=args.ratio, rate_per_gpu=args.rate,
             duration_s=3.0, seed=args.seed,
             mtbfs_us=(800_000.0,), n_chaos=3, out_path=None, strict=False,
+            telemetry_path=args.telemetry,
         )
     else:
         report = run_bench(
             args.gpus, args.ratio, args.rate, args.duration, args.seed,
             n_chaos=args.chaos, out_path=args.out,
+            telemetry_path=args.telemetry,
         )
-    print(json.dumps(json.loads(json.dumps(report, default=str)), indent=2))
+    print_json(report)
     if not report["meets_target"]:
         raise SystemExit(
             "fault recovery benchmark failed acceptance: "

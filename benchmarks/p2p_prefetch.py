@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import random
 import time
 from pathlib import Path
@@ -46,7 +45,13 @@ from repro.serving import (
     bursty_trace,
 )
 
-from benchmarks.common import MSCHED_Q
+from benchmarks.common import (
+    MSCHED_Q,
+    export_telemetry,
+    make_telemetry,
+    print_json,
+    write_json,
+)
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_p2p.json"
 TENANTS = ("qwen3-1.7b", "llama3.2-3b")
@@ -140,7 +145,11 @@ def run_bench(
     hotspot: float = 0.7,
     drain_factor: float = 8.0,
     out_path: Optional[Path] = DEFAULT_OUT,
+    telemetry_path: Optional[Path] = None,
 ) -> Dict[str, object]:
+    # one traced run per invocation: the nvlink fleet (the trace shows the
+    # manifest-hop + peer-fetch spans behind the p2p working-set-movement win)
+    tel = make_telemetry(telemetry_path)
     trace = build_trace(n_gpus, rate_per_gpu, duration_s, seed)
     foot = mean_request_footprint(trace)
     cap_per_gpu = int(TARGET_CONCURRENCY * foot / ratio)
@@ -176,6 +185,7 @@ def run_bench(
             drain_factor=drain_factor,
             rebalance_period_us=REBALANCE_US,
             rebalance_threshold=0.4,
+            telemetry=tel if tag == "nvlink" else None,
         )
         row = rep.to_row()
         row["wall_s"] = time.perf_counter() - t0
@@ -198,15 +208,15 @@ def run_bench(
     report["meets_target"] = (
         a is not None and b is not None and a < b
     ) or ratio < 1.5
+    export_telemetry(tel, telemetry_path)
     if out_path is not None:
-        serializable = json.loads(json.dumps(report, default=str))
-        out_path.write_text(json.dumps(serializable, indent=2) + "\n")
+        write_json(out_path, report)
     return report
 
 
-def run():
+def run(telemetry_path=None):
     """benchmarks.run entry point."""
-    report = run_bench()
+    report = run_bench(telemetry_path=telemetry_path)
     rows = []
     for tag in ("pcie", "nvlink"):
         row = report["fleets"][tag]
@@ -232,6 +242,10 @@ def main() -> None:
     ap.add_argument("--hotspot", type=float, default=0.7)
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     ap.add_argument(
+        "--telemetry", type=Path, default=None, metavar="out.trace",
+        help="export a Chrome trace of the nvlink fleet's run",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="fast CI config: 2 GPUs, short trace, no artifact",
     )
@@ -240,14 +254,14 @@ def main() -> None:
         report = run_bench(
             n_gpus=2, ratio=args.ratio, rate_per_gpu=args.rate,
             duration_s=3.0, seed=args.seed, hotspot=args.hotspot,
-            out_path=None,
+            out_path=None, telemetry_path=args.telemetry,
         )
     else:
         report = run_bench(
             args.gpus, args.ratio, args.rate, args.duration, args.seed,
-            args.hotspot, out_path=args.out,
+            args.hotspot, out_path=args.out, telemetry_path=args.telemetry,
         )
-    print(json.dumps(json.loads(json.dumps(report, default=str)), indent=2))
+    print_json(report)
     if not report["meets_target"]:
         raise SystemExit(
             "NVLink-rich fleet did not beat PCIe-only on working-set "

@@ -22,7 +22,6 @@ Usage: PYTHONPATH=src python -m benchmarks.serve_oversub [--smoke]
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
@@ -38,7 +37,14 @@ from repro.serving import (
 )
 from repro.serving.lifecycle import ServedRequestTask
 
-from benchmarks.common import MSCHED_Q, UM_Q
+from benchmarks.common import (
+    MSCHED_Q,
+    UM_Q,
+    export_telemetry,
+    make_telemetry,
+    print_json,
+    write_json,
+)
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 TARGET_GOODPUT_RATIO = 3.0
@@ -64,7 +70,11 @@ def run_bench(
     out_path: Optional[Path] = DEFAULT_OUT,
     output_mean: int = 32,
     drain_factor: float = 8.0,
+    telemetry_path: Optional[Path] = None,
 ) -> Dict[str, object]:
+    # one traced run per invocation: the msched arm at the first (lowest)
+    # oversubscription ratio in the sweep
+    tel = make_telemetry(telemetry_path)
     trace = poisson_trace(
         rate_rps,
         duration_s,
@@ -105,6 +115,11 @@ def run_bench(
                 page_size=page_size,
                 slo=SLO,
                 drain_factor=drain_factor,
+                telemetry=(
+                    tel
+                    if backend == "msched" and ratio == ratios[0]
+                    else None
+                ),
             )
             r = rep.to_row()
             r["wall_s"] = time.perf_counter() - t0
@@ -123,15 +138,15 @@ def run_bench(
         and r["msched"]["goodput_per_s"] > 0
         for r in pressured
     )
+    export_telemetry(tel, telemetry_path)
     if out_path is not None:
-        serializable = json.loads(json.dumps(report, default=str))
-        out_path.write_text(json.dumps(serializable, indent=2) + "\n")
+        write_json(out_path, report)
     return report
 
 
-def run():
+def run(telemetry_path=None):
     """benchmarks.run entry point: name,us,derived rows."""
-    report = run_bench()
+    report = run_bench(telemetry_path=telemetry_path)
     rows = []
     for row in report["sweep"]:
         ms, um = row["msched"], row["um"]
@@ -163,6 +178,10 @@ def main() -> None:
     )
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     ap.add_argument(
+        "--telemetry", type=Path, default=None, metavar="out.trace",
+        help="export a Chrome trace of the msched arm at the first ratio",
+    )
+    ap.add_argument(
         "--requests", type=int, default=None,
         help="long-trace mode: replay a trace of ~this many requests at 1.5x "
         "oversubscription (run-native hierarchy makes 500+ tractable)",
@@ -176,6 +195,7 @@ def main() -> None:
         report = run_bench(
             ratios=[1.5], rate_rps=4.0, duration_s=2.0, seed=args.seed,
             arch=args.arch or "qwen3-1.7b", out_path=None, output_mean=16,
+            telemetry_path=args.telemetry,
         )
     elif args.requests:
         # long-trace mode: the drain window shrinks to 2x the offered-load
@@ -186,14 +206,15 @@ def main() -> None:
             rate_rps=args.rate,
             duration_s=args.requests / args.rate, seed=args.seed,
             arch=args.arch or "qwen3-1.7b", out_path=args.out,
-            drain_factor=2.0,
+            drain_factor=2.0, telemetry_path=args.telemetry,
         )
     else:
         report = run_bench(
             args.ratios, args.rate, args.duration, args.seed,
             args.arch or "paper-llama3-8b", out_path=args.out,
+            telemetry_path=args.telemetry,
         )
-    print(json.dumps(json.loads(json.dumps(report, default=str)), indent=2))
+    print_json(report)
     if not report["meets_target"]:
         raise SystemExit("MSched goodput below target vs UM under pressure")
 

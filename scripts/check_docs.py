@@ -108,6 +108,7 @@ def main() -> int:
     files = [Path(a) for a in sys.argv[1:]] or [
         REPO / "README.md",
         REPO / "docs" / "architecture.md",
+        REPO / "docs" / "observability.md",
     ]
     errors: list[str] = []
     for md in files:

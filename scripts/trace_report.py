@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Render or validate an exported ``msched-trace-v1`` Chrome trace.
+
+Default mode prints a text report of the trace written by a ``--telemetry``
+benchmark run (or ``Telemetry.write_chrome``):
+
+  * the banked run summary (sim time, faults, switches, migrated bytes);
+  * top stall sources — the stall-attribution ledger's six categories
+    aggregated over tasks, ranked by total µs;
+  * a per-link heatmap — peak/mean in-flight bytes and peak sharer count
+    from the sampled counter probes;
+  * the fault-coalescing ratio — working-set pages moved per planned
+    migration (how many demand faults each proactive move replaced).
+
+``--validate`` instead runs :func:`repro.telemetry.validate_trace` (schema
+validity, monotone timestamps, balanced begin/end pairs, exact stall-ledger
+conservation) and exits non-zero on any error — the CI telemetry smoke.
+
+Usage: python scripts/trace_report.py out.trace [--validate] [--top 10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+)
+from repro.telemetry import SCHEMA, STALL_CATEGORIES, validate_trace  # noqa: E402
+
+
+def load(path: Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_validate(doc: dict, path: Path) -> int:
+    errors = validate_trace(doc)
+    for e in errors:
+        print(f"TRACE INVALID: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    n_events = sum(
+        1 for ev in doc.get("traceEvents", []) if ev.get("ph") != "M"
+    )
+    n_tracks = sum(
+        1 for ev in doc.get("traceEvents", []) if ev.get("ph") == "M"
+    )
+    print(
+        f"trace ok: {path} ({doc.get('otherData', {}).get('schema')}, "
+        f"{n_events} events on {n_tracks} tracks, "
+        f"{len(doc.get('stallLedger', {}))} ledger rows, "
+        f"{doc.get('dropped_events', 0)} dropped)"
+    )
+    return 0
+
+
+def _track_names(doc: dict) -> dict:
+    """pid → track name, from the process_name metadata events."""
+    return {
+        ev["pid"]: ev.get("args", {}).get("name", f"pid{ev['pid']}")
+        for ev in doc.get("traceEvents", [])
+        if ev.get("ph") == "M" and ev.get("name") == "process_name"
+    }
+
+
+def stall_section(doc: dict, top: int) -> None:
+    ledger = doc.get("stallLedger", {})
+    if not ledger:
+        print("stall ledger: (empty — no finished tasks in the trace)")
+        return
+    totals = {cat: 0.0 for cat in STALL_CATEGORIES}
+    wall = non_compute = 0.0
+    for row in ledger.values():
+        for cat in STALL_CATEGORIES:
+            totals[cat] += row.get(cat, 0.0)
+        wall += row.get("wall_us", 0.0)
+        non_compute += row.get("non_compute_us", 0.0)
+    print(
+        f"stall ledger: {len(ledger)} tasks, "
+        f"{wall / 1e6:.3f}s wall, {non_compute / 1e6:.3f}s non-compute "
+        f"({100.0 * non_compute / wall if wall else 0.0:.1f}%)"
+    )
+    print("top stall sources:")
+    ranked = sorted(totals.items(), key=lambda kv: -kv[1])[:top]
+    for cat, us in ranked:
+        share = 100.0 * us / non_compute if non_compute else 0.0
+        print(f"  {cat:<20} {us / 1e6:>10.4f}s  {share:5.1f}%")
+
+
+def link_section(doc: dict) -> None:
+    probes = doc.get("probes", {})
+    links: dict = defaultdict(dict)
+    for key, points in probes.items():
+        track, _, name = key.rpartition("/")
+        if track.startswith("link:"):
+            links[track[len("link:"):]][name] = [v for _t, v in points]
+    if not links:
+        print("link heatmap: (no link probes — single-GPU or unsampled run)")
+        return
+    print("link heatmap:")
+    print(f"  {'link':<18} {'peak inflight':>14} {'mean inflight':>14} "
+          f"{'peak sharers':>13}")
+    for link in sorted(links):
+        vals = links[link]
+        inflight = vals.get("inflight_bytes", [0])
+        sharers = vals.get("sharers", [0])
+        mean = sum(inflight) / len(inflight) if inflight else 0.0
+        print(
+            f"  {link:<18} {max(inflight) / 1e6:>12.2f}MB "
+            f"{mean / 1e6:>12.2f}MB {max(sharers, default=0):>13}"
+        )
+
+
+def coalescing_section(doc: dict) -> None:
+    names = _track_names(doc)
+    plans = 0
+    pages = 0
+    per_track: dict = defaultdict(int)
+    for ev in doc.get("traceEvents", []):
+        if ev.get("name") == "migration_plan" and ev.get("ph") != "M":
+            plans += 1
+            pages += int(ev.get("args", {}).get("pages", 0))
+            per_track[names.get(ev.get("pid"), "?")] += 1
+    ratio = pages / max(1, plans)
+    print(
+        f"fault coalescing: {plans} planned migrations moved {pages} pages "
+        f"-> {ratio:.1f} faults avoided per migration"
+    )
+    if per_track:
+        origin = ", ".join(
+            f"{tr}:{n}" for tr, n in sorted(per_track.items())
+        )
+        print(f"  plan origins: {origin}")
+
+
+def run_report(doc: dict, path: Path, top: int) -> int:
+    schema = doc.get("otherData", {}).get("schema")
+    if schema != SCHEMA:
+        print(
+            f"warning: schema {schema!r} != expected {SCHEMA!r}",
+            file=sys.stderr,
+        )
+    print(f"trace report: {path}")
+    summary = doc.get("summary", {})
+    if summary:
+        print("summary:")
+        for k in sorted(summary):
+            print(f"  {k} = {summary[k]}")
+    if doc.get("dropped_events"):
+        print(f"warning: {doc['dropped_events']} events dropped at the cap")
+    print()
+    stall_section(doc, top)
+    print()
+    link_section(doc)
+    print()
+    coalescing_section(doc)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", type=Path, help="Chrome trace JSON to read")
+    ap.add_argument(
+        "--validate", action="store_true",
+        help="check schema/monotonicity/pairing/ledger-conservation and "
+        "exit non-zero on any error",
+    )
+    ap.add_argument("--top", type=int, default=10,
+                    help="stall categories to show in the report")
+    args = ap.parse_args()
+    doc = load(args.trace)
+    if args.validate:
+        return run_validate(doc, args.trace)
+    return run_report(doc, args.trace, args.top)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,6 +44,45 @@ from repro.cluster.migration import MigrationEvent, Rebalancer
 from repro.cluster.placement import MSchedPlacement, PlacementPolicy, make_placement
 from repro.cluster.prefetch import PeerFetchEvent, PeerPrefetchFabric
 from repro.cluster.topology import ClusterTopology
+from repro.telemetry.hub import TRACK_CLUSTER
+
+# version tag for ClusterReport.to_json artifacts (benchmarks/common.py)
+REPORT_SCHEMA = "cluster-report-v1"
+
+
+def _result_to_json(res: SimResult) -> Dict[str, object]:
+    return {
+        "sim_us": res.sim_us,
+        "per_task": {
+            str(tid): dataclasses.asdict(st)
+            for tid, st in res.per_task.items()
+        },
+        "faults": res.faults,
+        "migrated_bytes": res.migrated_bytes,
+        "switches": res.switches,
+        "control_us": res.control_us,
+        "requests": [dataclasses.asdict(r) for r in res.requests],
+        "hbm_used_pages": res.hbm_used_pages,
+        "hbm_freed_pages": res.hbm_freed_pages,
+    }
+
+
+def _result_from_json(doc: Dict[str, object]) -> SimResult:
+    from repro.core.simulator import RequestRecord, TaskStats
+
+    return SimResult(
+        sim_us=doc["sim_us"],
+        per_task={
+            int(tid): TaskStats(**st) for tid, st in doc["per_task"].items()
+        },
+        faults=doc["faults"],
+        migrated_bytes=doc["migrated_bytes"],
+        switches=doc["switches"],
+        control_us=doc["control_us"],
+        requests=[RequestRecord(**r) for r in doc["requests"]],
+        hbm_used_pages=doc["hbm_used_pages"],
+        hbm_freed_pages=doc["hbm_freed_pages"],
+    )
 
 
 @dataclasses.dataclass
@@ -96,6 +135,9 @@ class ClusterReport:
     peer_fetch_bytes: int = 0
     peer_fallback_pages: int = 0  # lingered pages lost to source eviction
     linger_reclaimed_pages: int = 0
+    # of which: reclaimed by the finish hook at task retirement (instead of
+    # leaking until the next rebalance tick)
+    linger_finish_reaped: int = 0
     # fault-injection accounting (zero/empty on fault-free runs)
     faults_applied: int = 0
     recoveries: List[RecoveryEvent] = dataclasses.field(default_factory=list)
@@ -124,6 +166,7 @@ class ClusterReport:
             "peer_fetches": len(self.peer_fetches),
             "peer_fetch_bytes": self.peer_fetch_bytes,
             "peer_fallback_pages": self.peer_fallback_pages,
+            "linger_finish_reaped": self.linger_finish_reaped,
             "faults_applied": self.faults_applied,
             "recoveries": len(self.recoveries),
             "recoveries_by_kind": {
@@ -140,6 +183,99 @@ class ClusterReport:
         }
         row.update(dataclasses.asdict(self.stats))
         return row
+
+    # -- JSON artifact round-trip -------------------------------------------
+    def to_json(self) -> Dict[str, object]:
+        """Full-fidelity JSON-serializable form (benchmark artifacts).
+        Everything :meth:`from_json` needs to reconstruct an equivalent
+        report — nested results, request records, and event logs included —
+        so artifact writers stop hand-rolling field extraction."""
+        return {
+            "schema": REPORT_SCHEMA,
+            "backend": self.backend,
+            "placement": self.placement,
+            "n_gpus": self.n_gpus,
+            "total_capacity_bytes": self.total_capacity_bytes,
+            "oversubscription": self.oversubscription,
+            "offered_rps": self.offered_rps,
+            "slo": {"ttft_us": self.slo.ttft_us, "tpot_us": self.slo.tpot_us},
+            "stats": dataclasses.asdict(self.stats),
+            "merged": _result_to_json(self.merged),
+            "per_gpu": [
+                {
+                    "name": g.name,
+                    "platform": g.platform,
+                    "capacity_bytes": g.capacity_bytes,
+                    "placed": g.placed,
+                    "result": _result_to_json(g.result),
+                }
+                for g in self.per_gpu
+            ],
+            "migrations": [dataclasses.asdict(m) for m in self.migrations],
+            "deferred_migrations": self.deferred_migrations,
+            "peer_fetches": [
+                dataclasses.asdict(f) for f in self.peer_fetches
+            ],
+            "peer_fetch_bytes": self.peer_fetch_bytes,
+            "peer_fallback_pages": self.peer_fallback_pages,
+            "linger_reclaimed_pages": self.linger_reclaimed_pages,
+            "linger_finish_reaped": self.linger_finish_reaped,
+            "faults_applied": self.faults_applied,
+            "recoveries": [dataclasses.asdict(r) for r in self.recoveries],
+            "shed_requests": self.shed_requests,
+            "lost_requests": self.lost_requests,
+            "retry_exhausted": self.retry_exhausted,
+            "checkpoints": self.checkpoints,
+            "checkpoint_bytes": self.checkpoint_bytes,
+        }
+
+    @classmethod
+    def from_json(cls, doc: Dict[str, object]) -> "ClusterReport":
+        from repro.serving.engine import SLOSpec  # lazy: import edge
+
+        schema = doc.get("schema")
+        if schema != REPORT_SCHEMA:
+            raise ValueError(
+                f"unknown cluster-report schema {schema!r} "
+                f"(expected {REPORT_SCHEMA!r})"
+            )
+        return cls(
+            backend=doc["backend"],
+            placement=doc["placement"],
+            n_gpus=doc["n_gpus"],
+            total_capacity_bytes=doc["total_capacity_bytes"],
+            oversubscription=doc["oversubscription"],
+            offered_rps=doc["offered_rps"],
+            slo=SLOSpec(**doc["slo"]),
+            stats=RequestStats(**doc["stats"]),
+            merged=_result_from_json(doc["merged"]),
+            per_gpu=[
+                GPUReport(
+                    name=g["name"],
+                    platform=g["platform"],
+                    capacity_bytes=g["capacity_bytes"],
+                    placed=g["placed"],
+                    result=_result_from_json(g["result"]),
+                )
+                for g in doc["per_gpu"]
+            ],
+            migrations=[MigrationEvent(**m) for m in doc["migrations"]],
+            deferred_migrations=doc["deferred_migrations"],
+            peer_fetches=[PeerFetchEvent(**f) for f in doc["peer_fetches"]],
+            peer_fetch_bytes=doc["peer_fetch_bytes"],
+            peer_fallback_pages=doc["peer_fallback_pages"],
+            linger_reclaimed_pages=doc["linger_reclaimed_pages"],
+            linger_finish_reaped=doc["linger_finish_reaped"],
+            faults_applied=doc["faults_applied"],
+            recoveries=[
+                RecoveryEvent(**r) for r in doc["recoveries"]
+            ],
+            shed_requests=doc["shed_requests"],
+            lost_requests=doc["lost_requests"],
+            retry_exhausted=doc["retry_exhausted"],
+            checkpoints=doc["checkpoints"],
+            checkpoint_bytes=doc["checkpoint_bytes"],
+        )
 
 
 def simulate_cluster(
@@ -167,6 +303,7 @@ def simulate_cluster(
     shed_threshold: Optional[float] = 1.25,
     shed_rt_threshold: Optional[float] = None,
     retry_backoff_us: float = 0.0,
+    telemetry=None,
 ) -> ClusterReport:
     """Replay ``trace`` across the cluster and report fleet-level serving
     quality.
@@ -200,6 +337,14 @@ def simulate_cluster(
     every failure boundary and rebalance tick (raises on violation).
     ``retry_backoff_us`` layers capped exponential delay onto the
     migration retry protocol (0 keeps retries instant).
+
+    ``telemetry`` attaches one :class:`repro.telemetry.Telemetry` hub to
+    the whole fleet: every core, the rebalancer, the prefetch fabric, and
+    the fault runtime emit into it, rebalance ticks sample the cluster
+    probes (per-GPU occupancy, per-link in-flight bytes and sharers, host
+    staging), and the stall ledger is resolved against the merged result
+    before returning. ``None`` (the default) emits nothing and takes
+    exactly the untraced code paths.
     """
     # lazy: serving depends on cluster.aggregate at module level; the
     # reverse edge must not exist at import time
@@ -227,6 +372,7 @@ def simulate_cluster(
             pool=pool,
             dynamic=True,
             name=node.name,
+            telemetry=telemetry,
         )
         for i, node in enumerate(topology.gpus)
     ]
@@ -299,6 +445,12 @@ def simulate_cluster(
         if audit
         else None
     )
+    if telemetry is not None:
+        # pure observers: components check `telemetry is not None` at each
+        # emission site, so the None path is structurally unchanged
+        for component in (fabric, rebalancer, fault_rt, vault):
+            if component is not None:
+                component.telemetry = telemetry
 
     # -- the cluster event loop --------------------------------------------
     try:
@@ -339,10 +491,15 @@ def simulate_cluster(
                     cores[gi].inject(ev)
                     placed[gi] += 1
             else:
-                rebalancer.tick(cores, T)
+                moves = rebalancer.tick(cores, T)
                 if fabric is not None:
                     # lingering copies of finished tasks are garbage
                     fabric.reap()
+                if telemetry is not None:
+                    telemetry.instant(
+                        "rebalance_tick", TRACK_CLUSTER, T, moves=len(moves)
+                    )
+                    _sample_cluster_probes(telemetry, topology, cores, T)
                 next_tick += rebalance_period_us
                 if auditor is not None:
                     auditor.check(T, "tick")
@@ -395,7 +552,7 @@ def simulate_cluster(
     )
     total_cap = sum(node.hbm_bytes for node in topology.gpus)
     peak = peak_concurrent_bytes(footprints, records)
-    return ClusterReport(
+    report = ClusterReport(
         backend=backend,
         placement=placement.name,
         n_gpus=len(cores),
@@ -421,6 +578,7 @@ def simulate_cluster(
         peer_fetch_bytes=fabric.peer_bytes() if fabric else 0,
         peer_fallback_pages=fabric.fallback_pages if fabric else 0,
         linger_reclaimed_pages=fabric.reclaimed_pages if fabric else 0,
+        linger_finish_reaped=fabric.finish_reaped if fabric else 0,
         faults_applied=len(fault_rt.applied) if fault_rt else 0,
         recoveries=list(fault_rt.recoveries) if fault_rt else [],
         shed_requests=len(fault_rt.shed_events) if fault_rt else 0,
@@ -429,3 +587,35 @@ def simulate_cluster(
         checkpoints=vault.taken if vault else 0,
         checkpoint_bytes=vault.bytes if vault else 0,
     )
+    if telemetry is not None:
+        telemetry.finalize_cluster(report)
+    return report
+
+
+def _sample_cluster_probes(
+    telemetry, topology: ClusterTopology, cores: Sequence[SimCore], now: float
+) -> None:
+    """Fleet-level time-series probes, sampled at every rebalance tick
+    (never strided — ticks are already sparse): per-GPU HBM occupancy and
+    queue depths, host staging-budget usage, and per-link in-flight bytes
+    and sharer counts."""
+    for core in cores:
+        telemetry.counter(core.name, "hbm_used_pages", now, core.pool.used)
+        telemetry.counter(core.name, "run_queue_depth", now, len(core.tasks))
+        telemetry.counter(
+            core.name, "wait_queue_depth", now, len(core.waiting)
+        )
+    telemetry.counter(
+        "host", "staged_bytes", now, topology.host_staged_bytes(now)
+    )
+    for link in topology.links():
+        track = f"link:{link.a}<->{link.b}"
+        telemetry.counter(
+            track, "sharers", now, topology.active_on(link.a, link.b, now)
+        )
+        telemetry.counter(
+            track,
+            "inflight_bytes",
+            now,
+            topology.inflight_bytes(link.a, link.b, now),
+        )

@@ -237,6 +237,8 @@ class CheckpointVault:
         self.bytes = 0
         self.skipped = 0  # no-progress snapshots avoided
         self.deferred = 0  # D2H legs denied by link-graph planning
+        # telemetry hub or None; assigned by simulate_cluster when tracing
+        self.telemetry = None
 
     def snapshot(self, cores: Sequence[SimCore], now: float) -> int:
         """Checkpoint every running task on every alive core; returns the
@@ -287,6 +289,16 @@ class CheckpointVault:
                 self.taken += 1
                 self.bytes += nbytes
                 n += 1
+                if self.telemetry is not None:
+                    self.telemetry.span(
+                        "checkpoint",
+                        core.name,
+                        now,
+                        ready - now,
+                        task_id=tid,
+                        nbytes=nbytes,
+                        completed=rt.stats.completions,
+                    )
         return n
 
     def get(
@@ -405,6 +417,8 @@ class FaultRuntime:
         # running victims with no alive GPU: (prog, completed, rec, origin)
         self._stranded: List[tuple] = []
 
+        # telemetry hub or None; assigned by simulate_cluster when tracing
+        self.telemetry = None
         self.applied: List[FaultEvent] = []
         self.recoveries: List[RecoveryEvent] = []
         self.shed_events: List[Tuple[float, int, str, str]] = []
@@ -457,16 +471,35 @@ class FaultRuntime:
 
     # -- fault application ----------------------------------------------------
     def _apply(self, ev: FaultEvent, now: float) -> None:
+        tel = self.telemetry
         if ev.kind == "gpu_fail":
+            if tel is not None:
+                tel.instant("gpu_fail", ev.gpu, now)
             self._gpu_fail(ev.gpu, now)
         elif ev.kind == "gpu_recover":
             core = self._require_core(ev.gpu)
+            if tel is not None and core.failed:
+                tel.instant("gpu_recover", ev.gpu, now)
             core.recover(now)
             self._flush(now)
         elif ev.kind == "link_degrade":
             self.topology.degrade(ev.link[0], ev.link[1], ev.factor)
+            if tel is not None:
+                tel.counter(
+                    f"link:{ev.link[0]}<->{ev.link[1]}",
+                    "bandwidth_factor",
+                    now,
+                    ev.factor,
+                )
         elif ev.kind == "link_restore":
             self.topology.restore(ev.link[0], ev.link[1])
+            if tel is not None:
+                tel.counter(
+                    f"link:{ev.link[0]}<->{ev.link[1]}",
+                    "bandwidth_factor",
+                    now,
+                    1.0,
+                )
         elif ev.kind == "task_crash":
             self._crash(ev, now)
 
@@ -528,6 +561,25 @@ class FaultRuntime:
         self._recover(ej.program, ej.completed, ej.record, core.name, now)
 
     # -- recovery ------------------------------------------------------------
+    def _log_recovery(self, rev: RecoveryEvent) -> None:
+        self.recoveries.append(rev)
+        tel = self.telemetry
+        if tel is None:
+            return
+        tel.instant(
+            "recovery",
+            rev.dst or rev.src,
+            rev.time_us,
+            task_id=rev.task_id,
+            kind=rev.kind,
+            src=rev.src,
+            replayed_iters=rev.replayed_iters,
+        )
+        # the gap between the recovery decision and the continuation's
+        # re-arrival (restore transit, or backoff on a denied restore) is
+        # recovery-induced: the task runs nowhere during it
+        tel.stall(rev.task_id, "recovery", rev.arrival_us - rev.time_us)
+
     def _recover(
         self,
         prog,
@@ -579,7 +631,7 @@ class FaultRuntime:
                     ),
                     warm_runs=ck.runs,
                 )
-                self.recoveries.append(
+                self._log_recovery(
                     RecoveryEvent(
                         now, tid, "checkpoint", origin, target.name,
                         ck.completed, completed - ck.completed,
@@ -598,7 +650,7 @@ class FaultRuntime:
                     (due, self._seq, (prog, completed, rec, origin, attempt + 1)),
                 )
                 self._seq += 1
-                self.recoveries.append(
+                self._log_recovery(
                     RecoveryEvent(
                         now, tid, "requeue", origin, "", 0, 0, due
                     )
@@ -624,7 +676,7 @@ class FaultRuntime:
                     ),
                     warm_runs=warm,
                 )
-                self.recoveries.append(
+                self._log_recovery(
                     RecoveryEvent(
                         now, tid, "linger", origin, linger_src.name,
                         0, completed, now,
@@ -646,7 +698,7 @@ class FaultRuntime:
                 },
             )
         )
-        self.recoveries.append(
+        self._log_recovery(
             RecoveryEvent(
                 now, tid, "cold", origin, target.name, 0, completed, now
             )

@@ -227,6 +227,8 @@ class Rebalancer:
         self.retry_backoff_cap_us = retry_backoff_cap_us
         self.exhausted = 0
         self.events: List[MigrationEvent] = []
+        # telemetry hub or None; assigned by simulate_cluster when tracing
+        self.telemetry = None
         self._seq = 0
         self._cores: Sequence[SimCore] = ()
         # host-staged checkpoint transfers still parked in host DRAM, by
@@ -313,11 +315,11 @@ class Rebalancer:
             warm_runs=warm,
         )
         rec.meta["retried_to"] = target.name
-        self.events.append(
-            MigrationEvent(
-                now, tid, core.name, target.name, "retry", 0, 0, arrival
-            )
+        mv = MigrationEvent(
+            now, tid, core.name, target.name, "retry", 0, 0, arrival
         )
+        self.events.append(mv)
+        self._emit_move(mv)
         return True
 
     def _retarget_linger(self, tid: int, dst_name: str, warm):
@@ -348,6 +350,41 @@ class Rebalancer:
             warm = list(warm or []) + harvested
         return warm
 
+    def _emit_move(self, mv: MigrationEvent) -> None:
+        """Trace one rebalance move and attribute its transit time. The
+        transit splits against the uncontended floor: the solo portion is
+        migration-wait, the excess (fluid sharing with concurrent transfers)
+        is link-contention. Steals and retries move no bytes — instants
+        only, their wait resolves into the queue-wait residual."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        transit = max(0.0, mv.arrival_us - mv.time_us)
+        if mv.kind in ("checkpoint", "p2p"):
+            tel.span(
+                "migration_plan",
+                mv.src,
+                mv.time_us,
+                transit,
+                task_id=mv.task_id,
+                dst=mv.dst,
+                kind=mv.kind,
+                pages=mv.pages,
+                nbytes=mv.nbytes,
+            )
+            solo = self.topology.solo_transfer_us(mv.src, mv.dst, mv.nbytes)
+            tel.stall(mv.task_id, "mig_wait_transit", min(transit, solo))
+            if transit > solo:
+                tel.stall(mv.task_id, "link_contention", transit - solo)
+        tel.instant(
+            "migration_land",
+            mv.dst,
+            mv.arrival_us,
+            task_id=mv.task_id,
+            kind=mv.kind,
+            src=mv.src,
+        )
+
     def pressure(self, core: SimCore) -> float:
         st = core.state_view()
         quantum = self.quantum_us or getattr(st.policy, "quantum_us", 5_000.0)
@@ -370,6 +407,7 @@ class Rebalancer:
             if mv is None:
                 break
             moves.append(mv)
+            self._emit_move(mv)
         self.events.extend(moves)
         return moves
 

@@ -86,17 +86,34 @@ class PeerPrefetchFabric:
         self.fallback_pages = 0  # lingered runs lost to source-side eviction
         self.fresh_pages = 0  # populated pages never held by any peer
         self.reclaimed_pages = 0
+        # linger copies reclaimed by the finish hook — i.e. at the instant
+        # their task retired, instead of waiting for the next rebalance tick
+        self.finish_reaped = 0
+        # telemetry hub or None; assigned by simulate_cluster when tracing
+        self.telemetry = None
 
     def wire(self) -> None:
         """Install ``peer_source`` + ``cluster_view`` on every MSched
         coordinator (um/suv have no coordinator; ideal keeps its idealized
-        bound and ignores real interconnects by design)."""
+        bound and ignores real interconnects by design), and the per-core
+        finish hook that reaps a retired task's directory hint immediately
+        — a task that finishes mid-flight (its lazy-migration manifest still
+        in transit) must not leave its linger copy pinned on the source
+        until the next rebalance tick."""
         for core in self.cores.values():
+            core.finish_hook = self._on_finish
             if core.backend.name != "msched":
                 continue
             coord = core.backend.coordinator
             coord.peer_source = self._make_peer_source(core)
             coord.cluster_view = self._make_cluster_view(core)
+
+    def _on_finish(self, task_id: int, now: float) -> None:
+        if self.directory.get(task_id) is None:
+            return
+        freed = self.release(task_id)
+        if freed > 0:
+            self.finish_reaped += freed
 
     # -- peer-sourced population ---------------------------------------------
     def _make_peer_source(self, core: SimCore):
@@ -165,13 +182,27 @@ class PeerPrefetchFabric:
             core.backend.coordinator.pipelined,
             core.page_size,
         )
-        self.fetches.append(
-            PeerFetchEvent(
-                now, task_id, entry.src, core.name,
-                run_page_count(peer), nbytes, plan.arrival_us,
-                run_page_count(lost),
-            )
+        fetch = PeerFetchEvent(
+            now, task_id, entry.src, core.name,
+            run_page_count(peer), nbytes, plan.arrival_us,
+            run_page_count(lost),
         )
+        self.fetches.append(fetch)
+        if self.telemetry is not None:
+            # transit is NOT ledger-attributed here: the fetch overlaps the
+            # switch, and any wait the task actually experiences surfaces as
+            # the backend's ready-view delay (migration-wait, in-slice)
+            self.telemetry.span(
+                "peer_fetch",
+                core.name,
+                now,
+                plan.arrival_us - now,
+                task_id=task_id,
+                src=entry.src,
+                pages=fetch.pages,
+                nbytes=nbytes,
+                fallback_pages=fetch.fallback_pages,
+            )
         return TieredMigration(
             host_mig, [PeerGroup(entry.src, peer, rate)], core.page_size
         )

@@ -149,6 +149,38 @@ class ClusterTopology:
         ends = self._active.get(frozenset((a, b)), ())
         return sum(1 for e in ends if e > at_us)
 
+    def inflight_bytes(self, a: str, b: str, at_us: float) -> int:
+        """Bytes of planned transfers whose ``a<->b`` leg is still in flight
+        at ``at_us`` — a read-only probe (telemetry link-utilization
+        counters). A leg covers ``[previous leg's end, its own end)``;
+        fluid-at-start pricing means the payload occupies the whole leg."""
+        name = f"{a}<->{b}"
+        alt = f"{b}<->{a}"
+        total = 0
+        for plan in self.transfers:
+            start = plan.start_us
+            for leg_name, leg_end in plan.legs:
+                if leg_name in (name, alt) and start <= at_us < leg_end:
+                    total += plan.nbytes
+                start = leg_end
+        return total
+
+    def solo_transfer_us(self, src: str, dst: str, nbytes: int) -> float:
+        """What moving ``nbytes`` would take on an *uncontended* path at
+        current degradation factors — no booking, no staging check. The
+        telemetry layer splits a real (shared-rate) transit time against
+        this floor: the solo portion is migration-wait, the excess is
+        link-contention."""
+        if nbytes <= 0:
+            return 0.0
+        us = 0.0
+        for link in self.path(src, dst):
+            factor = self.link_factor(link.key())
+            if factor <= 0.0:
+                return float("inf")
+            us += nbytes / (link.gbps * factor * 1e3)
+        return us
+
     def path(self, src: str, dst: str) -> List[Link]:
         """Direct peer edge when present (and not downed), else host-staged
         two-hop path."""

@@ -111,6 +111,13 @@ class Backend:
     def migrated_pages(self) -> int:
         return 0
 
+    def switch_info(self) -> Optional[Dict[str, float]]:
+        """Telemetry probe: what the last ``on_switch`` moved (populated /
+        evicted pages, control time, migration duration). ``None`` for
+        backends that do no proactive work at a switch (um). Read only when
+        a telemetry hub is attached — never on the untraced hot path."""
+        return None
+
 
 class UMBackend(Backend):
     name = "um"
@@ -157,6 +164,7 @@ class MSchedBackend(Backend):
         self.control_free = control_free
         self.predictor_factory = predictor_factory
         self._migrated = 0
+        self.last_report = None  # latest SwitchReport, for switch_info()
 
     def admit_task(self, prog):
         if self.predictor_factory is None:
@@ -170,9 +178,21 @@ class MSchedBackend(Backend):
 
     def on_switch(self, task_id, timeline, now):
         report = self.coordinator.on_context_switch(task_id, timeline, now)
+        self.last_report = report
         self._migrated += report.populated_pages
         ctrl = 0.0 if self.control_free else report.madvise_us
         return ctrl, report.migration.ready_view(now + ctrl)
+
+    def switch_info(self):
+        rep = self.last_report
+        if rep is None:
+            return None
+        return {
+            "populated_pages": rep.populated_pages,
+            "evicted_pages": rep.evicted_pages,
+            "madvise_us": rep.madvise_us,
+            "migration_us": rep.migration.total_us,
+        }
 
     def on_command(self, cmd, runs, now):
         # mispredictions fall back to standard demand paging (§5.2)
@@ -196,6 +216,7 @@ class IdealBackend(MSchedBackend):
 
     def on_switch(self, task_id, timeline, now):
         report = self.coordinator.on_context_switch(task_id, timeline, now)
+        self.last_report = report
         self._migrated += report.populated_pages
         # population at the physically best per-direction rate: the duplex
         # ceiling is shared by concurrent eviction (swap = cap/2 each way,
@@ -245,6 +266,7 @@ class SUVBackend(Backend):
         for prog in programs:
             self.admit_task(prog)
         self._migrated = 0
+        self.last_switch = None  # (populated, evicted) pages, telemetry
 
     def admit_task(self, prog):
         self._task_runs[prog.task_id] = _task_footprint_runs(prog)
@@ -258,12 +280,25 @@ class SUVBackend(Backend):
         # cap the prefetch at HBM capacity (driver clamps)
         runs = clip_runs(runs, self.pool.capacity)
         populated, evicted = self.pool.migrate_runs(runs)
-        self._migrated += run_page_count(populated)
+        npop = run_page_count(populated)
+        nev = run_page_count(evicted)
+        self._migrated += npop
+        self.last_switch = (npop, nev)
         mig = plan_population_runs(
-            self.platform, populated, run_page_count(evicted), False,
-            self.page_size,
+            self.platform, populated, nev, False, self.page_size,
         )
         return 0.0, mig.ready_view(now)
+
+    def switch_info(self):
+        if self.last_switch is None:
+            return None
+        npop, nev = self.last_switch
+        return {
+            "populated_pages": npop,
+            "evicted_pages": nev,
+            "madvise_us": 0.0,
+            "migration_us": 0.0,
+        }
 
     def on_command(self, cmd, runs, now):
         missing = self.pool.missing_runs(runs)
@@ -451,12 +486,17 @@ class FailureReport:
 
 
 def percentile(sorted_xs: Sequence[float], pct: float) -> float:
-    """The repo-wide percentile convention (index = floor(pct/100 * n),
-    clamped) over an already-sorted sample list. ``SimResult`` and the
-    cluster aggregation layer both delegate here, so the convention cannot
-    drift between per-run and fleet-level metrics."""
+    """The repo-wide percentile convention: nearest-rank over an
+    already-sorted sample, index = floor(pct/100 * n) clamped to the last
+    element. ``SimResult``, the cluster aggregation layer, and every
+    benchmark scoreboard delegate here, so the convention cannot drift
+    between per-run and fleet-level metrics (a 1-GPU fleet's merged
+    percentiles must equal the single-core run's — pinned in
+    ``tests/cluster/test_telemetry_cluster.py``)."""
+    assert 0.0 <= pct <= 100.0, f"percentile out of range: {pct}"
     if not sorted_xs:
         return 0.0
+    assert sorted_xs[0] <= sorted_xs[-1], "percentile() wants a sorted sample"
     return sorted_xs[min(len(sorted_xs) - 1, int(pct / 100.0 * len(sorted_xs)))]
 
 
@@ -737,6 +777,7 @@ class SimCore:
         pool: str = "run",
         dynamic: Optional[bool] = None,
         name: str = "gpu0",
+        telemetry=None,
     ):
         programs = list(programs)
         if not page_size:
@@ -814,6 +855,15 @@ class SimCore:
         # (demoted to the eviction-list head) as a peer-prefetch source until
         # reclaimed by pressure or reclaim_linger()
         self.lingering: set = set()
+        # cluster hook: called with (task_id, now) when a task retires, so
+        # fleet-level bookkeeping (the peer-prefetch fabric's directory
+        # hints) is reaped at finish instead of waiting for the next
+        # rebalance tick. None = single-GPU behavior.
+        self.finish_hook: Optional[Callable[[int, float], None]] = None
+        # telemetry hub (repro.telemetry.Telemetry) or None; every emission
+        # site is guarded, so the None path is exactly the untraced code
+        self.telemetry = telemetry
+        self._tel_faults = 0  # backend fault counter at last fault event
 
         self.t = 0.0
         self.switches = 0
@@ -1003,6 +1053,14 @@ class SimCore:
             self._warm_runs.pop(ev.program.task_id, None)
             rec.rejected = True
             rec.meta["shed_us"] = self.t
+            if self.telemetry is not None:
+                self.telemetry.instant(
+                    "shed",
+                    self.name,
+                    self.t,
+                    task_id=ev.program.task_id,
+                    reason="capacity_shed",
+                )
             return ev, rec
         return None
 
@@ -1043,6 +1101,14 @@ class SimCore:
         if warm:
             self.pool.migrate_runs(clip_runs(warm, self.pool.capacity))
         rec.admitted_us = now
+        if self.telemetry is not None:
+            self.telemetry.instant(
+                "admission",
+                self.name,
+                now,
+                task_id=prog.task_id,
+                queued_us=max(0.0, now - ev.time_us),
+            )
         if rt.finished():
             # degenerate zero-iteration program: it can never produce the
             # completion event that triggers retirement, so retire it here
@@ -1075,6 +1141,16 @@ class SimCore:
         if rec is not None:
             rec.finished_us = now
             rec.iterations_done = rt.stats.completions
+        if self.telemetry is not None:
+            self.telemetry.instant(
+                "finish",
+                self.name,
+                now,
+                task_id=tid,
+                iterations=rt.stats.completions,
+            )
+        if self.finish_hook is not None:
+            self.finish_hook(tid, now)
 
     def _drain_waiting(self, now: float) -> None:
         # FIFO re-evaluation of the wait queue: stop at the first candidate
@@ -1101,6 +1177,14 @@ class SimCore:
                     # unfinished — the target GPU's fragment completes it
                     continue
                 rec.rejected = True
+                if self.telemetry is not None:
+                    self.telemetry.instant(
+                        "shed",
+                        self.name,
+                        now,
+                        task_id=ev.program.task_id,
+                        reason="admission_reject",
+                    )
             else:
                 break
 
@@ -1217,6 +1301,9 @@ class SimCore:
         else:
             timeline = TaskTimeline([entry])
         ctrl, ready = backend.on_switch(entry.task_id, timeline, t)
+        tel = self.telemetry
+        if tel is not None:
+            self._tel_switch_begin(entry.task_id, t, ctrl)
         t += ctrl
         self.control_us += ctrl
         self.switches += 1
@@ -1295,6 +1382,8 @@ class SimCore:
             stall = backend.on_command(cmd, runs, start)
             if stall > 0.0:
                 try_macro = cached_decode  # residency changed: re-arm
+            if tel is not None and (start > t or stall > 0.0):
+                self._tel_command(tid, t, start, stall)
             end = start + stall + cmd.latency_us
             rt.stats.commands += 1
             rt.stats.busy_us += end - t
@@ -1302,8 +1391,66 @@ class SimCore:
             t = end
             if rt.advance(t) and self._complete(tid, rt, t):
                 break
+        if tel is not None:
+            tel.end("switch", self.name, t, task_id=tid)
+            if self.switches % tel.sample_stride == 0:
+                tel.counter(self.name, "hbm_used_pages", t, self.pool.used)
+                tel.counter(self.name, "run_queue_depth", t, len(self.tasks))
+                tel.counter(
+                    self.name, "wait_queue_depth", t, len(self.waiting)
+                )
         self.t = t
         return True
+
+    # -- telemetry emission (slow path only; never reached when off) ---------
+    def _tel_switch_begin(self, tid: int, t: float, ctrl: float) -> None:
+        tel = self.telemetry
+        tel.begin("switch", self.name, t, task_id=tid, ctrl_us=ctrl)
+        if ctrl > 0.0:
+            tel.stall(tid, "scheduler_control", ctrl)
+        info = self.backend.switch_info()
+        if info is not None:
+            if info["populated_pages"] > 0:
+                tel.span(
+                    "migration_plan",
+                    self.name,
+                    t + info["madvise_us"],
+                    info["migration_us"],
+                    task_id=tid,
+                    pages=info["populated_pages"],
+                )
+            if info["evicted_pages"] > 0:
+                tel.instant(
+                    "eviction_batch",
+                    self.name,
+                    t,
+                    task_id=tid,
+                    pages=info["evicted_pages"],
+                )
+
+    def _tel_command(
+        self, tid: int, t: float, start: float, stall: float
+    ) -> None:
+        tel = self.telemetry
+        if start > t:
+            # the command waited for planned migration traffic to land
+            # (the backend's ready-view): migration-wait inside the slice
+            tel.stall(tid, "mig_wait_exec", start - t)
+            tel.span(
+                "migration_land", self.name, t, start - t, task_id=tid
+            )
+        if stall > 0.0:
+            faults = self.backend.faults()
+            tel.span(
+                "fault_service",
+                self.name,
+                start,
+                stall,
+                task_id=tid,
+                faults=faults - self._tel_faults,
+            )
+            self._tel_faults = faults
+            tel.stall(tid, "fault_service", stall)
 
     def result(self) -> SimResult:
         per_task = {tid: rt.stats for tid, rt in self.tasks.items()}
@@ -1352,6 +1499,7 @@ def simulate(
     profile_set: Optional[Sequence[TaskProgram]] = None,
     page_size: int = 0,
     pool: str = "run",
+    telemetry=None,
 ) -> SimResult:
     core = SimCore(
         programs,
@@ -1370,9 +1518,13 @@ def simulate(
         profile_set=profile_set,
         page_size=page_size,
         pool=pool,
+        telemetry=telemetry,
     )
     core.run(sim_us, final=True)
-    return core.result()
+    res = core.result()
+    if telemetry is not None:
+        telemetry.finalize(res)
+    return res
 
 
 def _true_page_order(space: AddressSpace, cmd: Command) -> List[int]:

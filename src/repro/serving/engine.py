@@ -120,6 +120,7 @@ def serve_trace(
     sim_us: Optional[float] = None,
     drain_factor: float = 8.0,
     pool: str = "run",
+    telemetry=None,
 ) -> ServeReport:
     """Replay ``trace`` and measure serving quality.
 
@@ -151,6 +152,7 @@ def serve_trace(
         page_size=page_size,
         prepopulate=False,
         pool=pool,
+        telemetry=telemetry,
     )
     # peak concurrent admitted footprint = the oversubscription actually hit
     peak_bytes = peak_concurrent_bytes(footprints, res.requests)

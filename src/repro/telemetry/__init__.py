@@ -1,0 +1,35 @@
+"""Fleet-wide observability: structured event tracing, sampled time-series
+probes, and causally-attributed stall accounting.
+
+The subsystem is zero-overhead when off: every hook in the simulator and
+cluster layers is nullable (``telemetry=None`` — the default — emits
+nothing and constructs nothing), so untraced runs are bit-for-bit identical
+to a tree without this package. See ``docs/observability.md`` for the event
+schema, the attribution taxonomy, and the Perfetto walkthrough.
+
+  * :class:`~repro.telemetry.hub.Telemetry` — the hub cores/cluster emit
+    into; owns events, counter series, and the stall ledger;
+  * :class:`~repro.telemetry.hub.StallLedger` — classifies every µs of
+    per-task non-compute wall time into {fault-service, migration-wait,
+    queue-wait, link-contention, recovery, scheduler-control}, with exact
+    conservation asserted;
+  * :mod:`~repro.telemetry.export` — Chrome trace_event JSON (Perfetto /
+    ``chrome://tracing``) and JSONL exporters, plus the validator behind
+    ``scripts/trace_report.py --validate``.
+"""
+from repro.telemetry.export import (  # noqa: F401
+    SCHEMA,
+    chrome_trace,
+    validate_trace,
+    write_chrome,
+    write_jsonl,
+)
+from repro.telemetry.hub import (  # noqa: F401
+    EVENT_TYPES,
+    STALL_CATEGORIES,
+    TRACK_CLUSTER,
+    LedgerConservationError,
+    StallLedger,
+    Telemetry,
+    TelemetryEvent,
+)

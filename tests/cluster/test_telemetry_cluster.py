@@ -1,0 +1,305 @@
+"""Cluster telemetry: the telemetry-off bit-for-bit pin (plain and faulted
+fleets), the faulted 4-GPU trace acceptance criterion (valid Chrome trace,
+per-GPU tracks, link counter tracks, exact stall conservation), the
+finish-hook linger reap regression, the 1-GPU fleet percentile-convention
+pin, and the ``ClusterReport`` JSON round-trip."""
+import json
+
+import pytest
+
+from repro.cluster import (
+    ClusterReport,
+    FaultEvent,
+    FaultInjector,
+    PeerPrefetchFabric,
+    PlacementPolicy,
+    homogeneous,
+    simulate_cluster,
+)
+from repro.core.hardware import NVLINK_A100_GBPS, RTX5080
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import SimCore, TaskArrival
+from repro.serving import (
+    MSchedAdmission,
+    Request,
+    SLOSpec,
+    ServedRequestTask,
+    poisson_trace,
+    serve_trace,
+)
+from repro.telemetry import (
+    STALL_CATEGORIES,
+    TRACK_CLUSTER,
+    Telemetry,
+    validate_trace,
+)
+
+ARCH = "qwen3-1.7b"
+PAGE = 1 << 20
+NV = NVLINK_A100_GBPS
+SLO = SLOSpec(ttft_us=3_000_000.0, tpot_us=100_000.0)
+
+
+def _trace(rate=6.0, duration=1.5, seed=3, output_mean=24):
+    return poisson_trace(
+        rate, duration, seed=seed, tenants=(ARCH,), prompt_mean=64,
+        output_mean=output_mean, max_output=2 * output_mean,
+    )
+
+
+def _rec_tuple(r):
+    return (
+        r.task_id, r.arrival_us, r.admitted_us, r.first_iter_us,
+        r.finished_us, r.iterations_done, r.total_iterations, r.rejected,
+    )
+
+
+def _fingerprint(rep):
+    m = rep.merged
+    return (
+        m.sim_us, m.faults, m.migrated_bytes, m.switches, m.control_us,
+        m.hbm_used_pages,
+        tuple(_rec_tuple(r) for r in m.requests),
+        len(rep.migrations), len(rep.peer_fetches), rep.peer_fetch_bytes,
+        rep.linger_reclaimed_pages, rep.linger_finish_reaped,
+        rep.faults_applied, len(rep.recoveries), rep.checkpoints,
+        rep.shed_requests, rep.lost_requests,
+    )
+
+
+class Pin0(PlacementPolicy):
+    name = "pin0"
+
+    def place(self, prog, arrival_us, cores):
+        return 0
+
+
+def _cluster(telemetry=None, n=2, faults=None, trace=None, **kw):
+    kw.setdefault("rebalance_period_us", 400_000.0)
+    kw.setdefault("rebalance_threshold", 0.4)
+    return simulate_cluster(
+        trace if trace is not None else _trace(),
+        homogeneous(n, RTX5080, capacity_bytes=3 << 30, nvlink_gbps=NV),
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, slo=SLO, faults=faults, telemetry=telemetry, **kw
+    )
+
+
+# --------------------------------------------------------------------------
+# Telemetry-off bit-for-bit equivalence
+# --------------------------------------------------------------------------
+
+
+def test_cluster_run_unperturbed_by_tracing():
+    off = _cluster(telemetry=None)
+    on = _cluster(telemetry=Telemetry(sample_stride=1))
+    assert _fingerprint(off) == _fingerprint(on)
+
+
+def test_faulted_cluster_run_unperturbed_by_tracing():
+    def inj():
+        return FaultInjector([
+            FaultEvent(500_000.0, "gpu_fail", gpu="gpu0"),
+            FaultEvent(1_200_000.0, "gpu_recover", gpu="gpu0"),
+            FaultEvent(600_000.0, "link_degrade", link=("gpu0", "gpu1"),
+                       factor=0.5),
+            FaultEvent(900_000.0, "link_restore", link=("gpu0", "gpu1")),
+        ])
+
+    off = _cluster(telemetry=None, faults=inj(),
+                   checkpoint_period_us=300_000.0, drain_factor=20.0)
+    on = _cluster(telemetry=Telemetry(sample_stride=1), faults=inj(),
+                  checkpoint_period_us=300_000.0, drain_factor=20.0)
+    assert _fingerprint(off) == _fingerprint(on)
+
+
+# --------------------------------------------------------------------------
+# The acceptance criterion: faulted 4-GPU fleet -> valid trace
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def faulted_4gpu():
+    # long-running tasks (200 output tokens) so they straddle checkpoint
+    # boundaries and the gpu0 outage interrupts work in flight
+    tel = Telemetry(sample_stride=1)
+    inj = FaultInjector([
+        FaultEvent(700_000.0, "gpu_fail", gpu="gpu0"),
+        FaultEvent(1_500_000.0, "gpu_recover", gpu="gpu0"),
+        FaultEvent(800_000.0, "link_degrade", link=("gpu0", "gpu2"),
+                   factor=0.25),
+    ])
+    rep = _cluster(
+        telemetry=tel, n=4, faults=inj,
+        trace=_trace(rate=2.0, duration=1.5, output_mean=200),
+        checkpoint_period_us=300_000.0, drain_factor=20.0,
+    )
+    return tel, rep
+
+
+def test_faulted_4gpu_trace_validates(faulted_4gpu, tmp_path):
+    tel, rep = faulted_4gpu
+    tel.write_chrome(tmp_path / "f.trace")
+    doc = json.loads((tmp_path / "f.trace").read_text())
+    assert validate_trace(doc) == []
+    tracks = {
+        ev["args"]["name"] for ev in doc["traceEvents"] if ev["ph"] == "M"
+    }
+    # one track per GPU, the cluster scope, and at least one link track
+    assert {"gpu0", "gpu1", "gpu2", "gpu3", TRACK_CLUSTER} <= tracks
+    assert any(t.startswith("link:") for t in tracks)
+    # link counter probes rode along
+    assert any(k.startswith("link:") and k.endswith("/inflight_bytes")
+               for k in doc["probes"])
+    assert any(k.startswith("link:") and k.endswith("/sharers")
+               for k in doc["probes"])
+    assert any(k.endswith("/hbm_used_pages") for k in doc["probes"])
+    assert "host/staged_bytes" in doc["probes"]
+
+
+def test_faulted_4gpu_event_coverage(faulted_4gpu):
+    tel, rep = faulted_4gpu
+    names = {e.name for e in tel.events}
+    assert {"switch", "admission", "finish", "rebalance_tick",
+            "gpu_fail", "gpu_recover", "checkpoint"} <= names
+    if rep.recoveries:
+        assert "recovery" in names
+    if rep.migrations:
+        assert {"migration_plan", "migration_land"} & names
+    ticks = [e for e in tel.events if e.name == "rebalance_tick"]
+    assert ticks and all(e.track == TRACK_CLUSTER for e in ticks)
+    fails = [e for e in tel.events if e.name == "gpu_fail"]
+    assert [e.track for e in fails] == ["gpu0"]
+
+
+def test_faulted_4gpu_stall_conservation_exact(faulted_4gpu):
+    tel, rep = faulted_4gpu
+    bd = tel.stall_breakdown()
+    finished = [
+        r for r in rep.merged.requests
+        if r.finished_us is not None and not r.rejected
+    ]
+    assert len(bd) == len(finished)
+    for rec in finished:
+        row = bd[rec.task_id]
+        assert row["wall_us"] == pytest.approx(
+            rec.finished_us - rec.arrival_us
+        )
+        attributed = sum(row[cat] for cat in STALL_CATEGORIES)
+        assert attributed == pytest.approx(
+            row["non_compute_us"], rel=1e-9, abs=1e-6
+        )
+    totals = tel.stall_totals()
+    if rep.recoveries:
+        assert totals["recovery"] > 0.0
+
+
+# --------------------------------------------------------------------------
+# Finish-hook linger reap (the silent-drop regression)
+# --------------------------------------------------------------------------
+
+
+def _serving_core(name, req_id=0, cap=4 << 30):
+    req = Request(req_id, ARCH, 1_000.0, prompt_tokens=64,
+                  output_tokens=64, slo_class="be")
+    events = [
+        TaskArrival(req.arrival_us,
+                    ServedRequestTask(req_id, req, page_size=PAGE))
+    ]
+    return SimCore(
+        [], RTX5080, "msched", capacity_bytes=cap,
+        policy=RoundRobinPolicy(350_000.0), task_events=events,
+        page_size=PAGE, prepopulate=False, name=name,
+        profile_set=[ServedRequestTask(10_000_000 + req_id, req,
+                                       page_size=PAGE)],
+    )
+
+
+def test_finish_hook_reaps_inflight_linger():
+    """A task that finishes while its lazy-migration manifest is still in
+    flight must have its linger copy reaped at retirement, not leak until
+    the next rebalance tick."""
+    topo = homogeneous(2, RTX5080, capacity_bytes=4 << 30, nvlink_gbps=NV)
+    c0, c1 = _serving_core("gpu0", 0), _serving_core("gpu1", 1)
+    fabric = PeerPrefetchFabric(topo, [c0, c1])
+    fabric.wire()
+    assert c0.finish_hook is not None and c1.finish_hook is not None
+
+    # fake a lazy migration gpu0 -> gpu1 whose manifest lands at t=1000:
+    # 10 pages linger on gpu0, hinted in the directory
+    span = (0, 10)
+    c0.pool.register_task(42, span)
+    c0.pool.populate_runs([span])
+    c0.lingering.add(42)
+    fabric.directory.record(42, "gpu0", "gpu1", [span], arrival_us=1_000.0)
+    used_before = c0.pool.used
+
+    # the task finishes on gpu1 at t=500 — mid-flight
+    c1.finish_hook(42, 500.0)
+    assert fabric.directory.get(42) is None
+    assert fabric.finish_reaped == 10
+    assert fabric.reclaimed_pages == 10
+    assert c0.pool.used == used_before - 10
+    assert 42 not in c0.lingering
+    # idempotent: a second finish (or the next reap tick) finds nothing
+    c1.finish_hook(42, 600.0)
+    assert fabric.finish_reaped == 10
+
+
+def test_finish_reap_counted_in_report():
+    rep = _cluster(telemetry=None)
+    assert rep.linger_finish_reaped >= 0
+    assert rep.to_row()["linger_finish_reaped"] == rep.linger_finish_reaped
+
+
+# --------------------------------------------------------------------------
+# Percentile-convention pin: 1-GPU fleet == single core
+# --------------------------------------------------------------------------
+
+
+def test_single_gpu_fleet_percentiles_match_single_core():
+    """The cluster aggregation layer and the single-core serving path share
+    one percentile convention: a 1-GPU fleet's merged scoreboard equals the
+    plain ``serve_trace`` scoreboard on the same trace."""
+    tr = _trace()
+    solo = serve_trace(
+        tr, RTX5080, backend="msched", capacity_bytes=3 << 30,
+        admission=MSchedAdmission(headroom=0.9),
+        policy=RoundRobinPolicy(350_000.0), page_size=PAGE, slo=SLO,
+    )
+    fleet = simulate_cluster(
+        tr, homogeneous(1, RTX5080, capacity_bytes=3 << 30),
+        backend="msched", placement=Pin0(),
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, slo=SLO,
+    )
+    st = fleet.stats
+    assert st.ttft_p50_us == solo.ttft_p50_us
+    assert st.ttft_p99_us == solo.ttft_p99_us
+    assert st.tpot_p50_us == solo.tpot_p50_us
+    assert st.tpot_p99_us == solo.tpot_p99_us
+    assert st.latency_p99_us == solo.latency_p99_us
+    assert st.goodput_per_s == solo.goodput_per_s
+    assert st.throughput_per_s == solo.throughput_per_s
+
+
+# --------------------------------------------------------------------------
+# ClusterReport JSON round-trip
+# --------------------------------------------------------------------------
+
+
+def test_cluster_report_json_roundtrip():
+    rep = _cluster(telemetry=None)
+    doc = json.loads(json.dumps(rep.to_json()))
+    back = ClusterReport.from_json(doc)
+    assert back.to_row() == rep.to_row()
+    assert _fingerprint(back) == _fingerprint(rep)
+    assert [_rec_tuple(r) for g in back.per_gpu for r in g.result.requests] \
+        == [_rec_tuple(r) for g in rep.per_gpu for r in g.result.requests]
+    # a second round-trip is a fixed point
+    assert back.to_json() == rep.to_json()
+    with pytest.raises(ValueError):
+        ClusterReport.from_json({"schema": "not-a-report"})

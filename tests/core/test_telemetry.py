@@ -1,0 +1,283 @@
+"""Telemetry hub: emission typing, the event cap, the stall-attribution
+ledger's conservation law, the telemetry-off bit-for-bit guarantee on the
+core simulator (4 backends, static and serving), and the trace exporters'
+round-trip through the validator."""
+import json
+
+import pytest
+
+from repro.core.hardware import RTX5080
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import percentile, simulate
+from repro.core.workloads import LLMDecodeTask, MatMulTask
+from repro.serving import (
+    AlwaysAdmit,
+    MSchedAdmission,
+    SLOSpec,
+    poisson_trace,
+    serve_trace,
+)
+from repro.telemetry import (
+    EVENT_TYPES,
+    STALL_CATEGORIES,
+    LedgerConservationError,
+    StallLedger,
+    Telemetry,
+    chrome_trace,
+    validate_trace,
+)
+
+ARCH = "qwen3-1.7b"
+PAGE = 1 << 20
+SLO = SLOSpec(ttft_us=3_000_000.0, tpot_us=100_000.0)
+
+
+def _progs():
+    return [
+        LLMDecodeTask(0, page_size=PAGE, max_context=512),
+        MatMulTask(1, 2048, page_size=PAGE),
+    ]
+
+
+def _trace(rate=5.0, duration=1.2, seed=7, output_mean=16):
+    return poisson_trace(
+        rate, duration, seed=seed, tenants=(ARCH,), prompt_mean=64,
+        output_mean=output_mean, max_output=2 * output_mean,
+    )
+
+
+def _static(backend, telemetry=None, cap_ratio=1.5):
+    progs = _progs()
+    foot = sum(p.footprint_bytes() for p in progs)
+    q = 2_000.0 if backend in ("um", "suv") else 350_000.0
+    return simulate(
+        progs, RTX5080, backend, capacity_bytes=int(foot / cap_ratio),
+        sim_us=1_000_000.0, policy=RoundRobinPolicy(q), telemetry=telemetry,
+    )
+
+
+def _serve(backend, telemetry=None):
+    admission = (
+        MSchedAdmission(headroom=0.9) if backend == "msched" else AlwaysAdmit()
+    )
+    q = 2_000.0 if backend in ("um", "suv") else 350_000.0
+    return serve_trace(
+        _trace(), RTX5080, backend=backend, capacity_bytes=3 << 30,
+        admission=admission, policy=RoundRobinPolicy(q), page_size=PAGE,
+        slo=SLO, telemetry=telemetry,
+    )
+
+
+def _rec_tuple(r):
+    return (
+        r.task_id, r.arrival_us, r.admitted_us, r.first_iter_us,
+        r.finished_us, r.iterations_done, r.total_iterations, r.rejected,
+    )
+
+
+def _result_fingerprint(res):
+    return (
+        res.sim_us, res.faults, res.migrated_bytes, res.switches,
+        res.control_us, res.hbm_used_pages, res.hbm_freed_pages,
+        tuple(sorted(
+            (tid, st.completions, st.commands, st.busy_us)
+            for tid, st in res.per_task.items()
+        )),
+        tuple(_rec_tuple(r) for r in res.requests),
+    )
+
+
+# --------------------------------------------------------------------------
+# Hub emission typing + the event cap
+# --------------------------------------------------------------------------
+
+
+def test_emit_rejects_unknown_event_and_phase():
+    tel = Telemetry()
+    with pytest.raises(ValueError):
+        tel.emit("mystery_event", "i", "gpu0", 0.0)
+    with pytest.raises(ValueError):
+        tel.emit("finish", "Z", "gpu0", 0.0)
+    with pytest.raises(ValueError):
+        Telemetry(sample_stride=0)
+
+
+def test_stall_ledger_rejects_unknown_key():
+    led = StallLedger()
+    with pytest.raises(ValueError):
+        led.add(1, "coffee-break", 10.0)
+    led.add(1, "fault_service", -5.0)  # non-positive: ignored
+    assert led.raw(1) == {}
+
+
+def test_event_cap_counts_drops_and_exempts_end_events():
+    tel = Telemetry(max_events=2)
+    tel.begin("switch", "gpu0", 0.0, task_id=1)
+    tel.begin("switch", "gpu0", 1.0, task_id=2)
+    tel.instant("finish", "gpu0", 2.0, task_id=1)  # over cap: dropped
+    tel.end("switch", "gpu0", 3.0, task_id=2)  # "E" exempt
+    tel.end("switch", "gpu0", 4.0, task_id=1)
+    assert tel.dropped_events == 1
+    assert [e.ph for e in tel.events] == ["B", "B", "E", "E"]
+    # the capped trace still validates (balanced pairs)
+    doc = chrome_trace(tel)
+    assert validate_trace(doc) == []
+    assert doc["dropped_events"] == 1
+
+
+# --------------------------------------------------------------------------
+# Conservation law
+# --------------------------------------------------------------------------
+
+
+def test_ledger_conservation_detects_double_counting():
+    res = _serve("msched", telemetry=None).result
+    led = StallLedger()
+    victim = next(
+        r.task_id for r in res.requests if r.finished_us is not None
+    )
+    # attribute more stall than the victim's whole wall time
+    wall = next(
+        r.finished_us - r.arrival_us
+        for r in res.requests if r.task_id == victim
+    )
+    led.add(victim, "recovery", 10.0 * wall)
+    with pytest.raises(LedgerConservationError):
+        led.breakdown(res)
+
+
+@pytest.mark.parametrize("backend", ["um", "msched"])
+def test_serving_trace_ledger_conserves(backend):
+    """Every finished request's six categories sum exactly to its
+    non-compute wall gap, and the residual queue-wait is non-negative."""
+    tel = Telemetry(sample_stride=1)
+    _serve(backend, telemetry=tel)
+    bd = tel.stall_breakdown()
+    assert bd, "a drained serving run must resolve ledger rows"
+    for tid, row in bd.items():
+        attributed = sum(row[cat] for cat in STALL_CATEGORIES)
+        assert attributed == pytest.approx(
+            row["non_compute_us"], rel=1e-9, abs=1e-6
+        )
+        assert row["queue-wait"] >= -1e-6
+        assert row["wall_us"] == pytest.approx(
+            row["compute_us"] + row["non_compute_us"], rel=1e-9, abs=1e-6
+        )
+    totals = tel.stall_totals()
+    assert set(STALL_CATEGORIES) <= set(totals)
+    if backend == "um":
+        assert totals["fault-service"] > 0.0, "UM must page-fault under 1.5x"
+
+
+def test_unfinalized_hub_raises():
+    tel = Telemetry()
+    with pytest.raises(RuntimeError):
+        tel.stall_breakdown()
+
+
+# --------------------------------------------------------------------------
+# Telemetry-off bit-for-bit equivalence (the pinned guarantee)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_static_run_unperturbed_by_tracing(backend):
+    off = _static(backend, telemetry=None)
+    on = _static(backend, telemetry=Telemetry(sample_stride=1))
+    assert _result_fingerprint(off) == _result_fingerprint(on)
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_serving_run_unperturbed_by_tracing(backend):
+    off = _serve(backend, telemetry=None)
+    on = _serve(backend, telemetry=Telemetry(sample_stride=1))
+    assert _result_fingerprint(off.result) == _result_fingerprint(on.result)
+    assert off.to_row() == on.to_row()
+
+
+# --------------------------------------------------------------------------
+# Export + validator round-trip
+# --------------------------------------------------------------------------
+
+
+def test_single_core_trace_exports_and_validates(tmp_path):
+    tel = Telemetry(sample_stride=1)
+    rep = _serve("msched", telemetry=tel)
+    assert any(e.name == "switch" for e in tel.events)
+    assert any(e.name == "admission" for e in tel.events)
+    assert any(e.name == "finish" for e in tel.events)
+    assert ("gpu0", "hbm_used_pages") in tel.series
+
+    doc = tel.chrome_trace()
+    assert validate_trace(doc) == []
+    # JSON round-trip (what write_chrome produces and trace_report reads)
+    path = tmp_path / "t.trace"
+    tel.write_chrome(path)
+    loaded = json.loads(path.read_text())
+    assert validate_trace(loaded) == []
+    assert loaded["otherData"]["schema"] == "msched-trace-v1"
+    tracks = {
+        ev["args"]["name"] for ev in loaded["traceEvents"]
+        if ev["ph"] == "M"
+    }
+    assert "gpu0" in tracks
+    # summary banked by finalize matches the run
+    assert loaded["summary"]["switches"] == rep.result.switches
+    assert loaded["summary"]["faults"] == rep.result.faults
+
+    jsonl = tmp_path / "t.jsonl"
+    tel.write_jsonl(jsonl)
+    lines = [json.loads(ln) for ln in jsonl.read_text().splitlines()]
+    assert lines[0]["type"] == "meta"
+    kinds = {ln["type"] for ln in lines}
+    assert {"meta", "event", "counter", "ledger"} <= kinds
+
+
+def test_validator_flags_broken_traces():
+    assert validate_trace([]) == ["document is not a JSON object"]
+    assert validate_trace({}) == ["missing or non-list traceEvents"]
+    bad_pair = {
+        "traceEvents": [
+            {"name": "switch", "ph": "E", "pid": 1, "tid": 0, "ts": 1.0},
+        ],
+    }
+    assert any("without matching B" in e for e in validate_trace(bad_pair))
+    non_monotone = {
+        "traceEvents": [
+            {"name": "finish", "ph": "i", "pid": 1, "tid": 0, "ts": 5.0},
+            {"name": "finish", "ph": "i", "pid": 1, "tid": 0, "ts": 1.0},
+        ],
+    }
+    assert any("not monotone" in e for e in validate_trace(non_monotone))
+    bad_ledger = {
+        "traceEvents": [],
+        "stallLedger": {
+            "7": {
+                "fault-service": 5.0, "migration-wait": 0.0,
+                "queue-wait": 0.0, "link-contention": 0.0,
+                "recovery": 0.0, "scheduler-control": 0.0,
+                "non_compute_us": 1.0,
+            }
+        },
+    }
+    assert any("categories sum" in e for e in validate_trace(bad_ledger))
+
+
+def test_event_taxonomy_is_closed():
+    """Every documented event type round-trips through emit; the taxonomy
+    and the stall categories are the public names docs pin."""
+    tel = Telemetry()
+    for i, name in enumerate(sorted(EVENT_TYPES)):
+        tel.instant(name, "gpu0", float(i))
+    assert len(tel.events) == len(EVENT_TYPES)
+    assert len(STALL_CATEGORIES) == 6
+
+
+def test_percentile_convention_guard():
+    assert percentile([], 99.0) == 0.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50.0) == 3.0  # nearest-rank floor
+    assert percentile([1.0, 2.0, 3.0, 4.0], 99.0) == 4.0
+    with pytest.raises(AssertionError):
+        percentile([3.0, 1.0], 50.0)  # unsorted sample
+    with pytest.raises(AssertionError):
+        percentile([1.0], 120.0)
