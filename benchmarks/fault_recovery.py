@@ -24,15 +24,26 @@ degraded-mode capacity the recovery subsystem restores. Acceptance: the
 checkpoint-based and checkpoint/linger-based arms beat the cold-restart
 baseline on goodput at **every** injected MTBF.
 
+A **journal arm** sweeps the *coordinator's* MTBF: engineered
+coordinator-crash cycles (each failing a GPU while the control plane is
+out, so victims strand in coordinator queues) run twice on identical
+timelines — once with write-ahead journal replay, once with a cold
+coordinator restart that forfeits the queues. Acceptance: the journal arm's
+RT deadline-miss rate is strictly lower than cold restart's, aggregated
+over the sweep.
+
 A randomized **chaos suite** rides along: >= 25 seeded fault schedules
 (GPU fail/recover, link degrade/restore flaps, task crashes) run on a
 2-GPU fleet with the inline :class:`~repro.core.invariants.InvariantAuditor`
 enabled at every fault boundary and rebalance tick; the suite must
-complete with zero violations. Writes ``BENCH_faults.json``.
+complete with zero violations. ``--coordinator-chaos`` adds coordinator
+crash/recover cycles to the schedules and runs every one under a
+replay-checked journal control plane (the CI chaos smoke). Writes
+``BENCH_faults.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.fault_recovery [--smoke]
        [--gpus 4] [--ratio 1.5] [--rate 1.5] [--duration 6.0]
-       [--chaos 25]
+       [--chaos 25] [--coordinator-chaos]
 """
 from __future__ import annotations
 
@@ -43,8 +54,9 @@ import time
 from pathlib import Path
 from typing import Dict, Optional, Sequence
 
-from repro.cluster import FaultInjector, simulate_cluster
+from repro.cluster import FaultEvent, FaultInjector, simulate_cluster
 from repro.cluster.topology import homogeneous
+from repro.control import ControlPlane, DeadlineSpec
 from repro.core.hardware import A100_40G, NVLINK_A100_GBPS
 from repro.core.invariants import InvariantViolation
 from repro.core.scheduler import RoundRobinPolicy
@@ -84,15 +96,24 @@ ARMS = (
     ("ckpt+linger", "auto", CHECKPOINT_US),
 )
 
+# coordinator-outage sweep: RT share of the trace and the deadline rubric
+# both arms are scored against (bookkeeping only — deadline_period_us=None
+# means no enforcement, so the arms differ purely in recovery mode)
+RT_FRACTION = 0.4
+COORD_MTTR_US = 400_000.0
+DEADLINES = DeadlineSpec(rt_ttft_us=2_500_000.0, rt_latency_us=9_000_000.0)
+
 
 def build_trace(
-    n_gpus: int, rate_per_gpu: float, duration_s: float, seed: int
+    n_gpus: int, rate_per_gpu: float, duration_s: float, seed: int,
+    rt_fraction: float = 0.0,
 ) -> Trace:
     """Bursty arrivals with KV-heavy requests (long prompts, long decodes):
     failures mid-decode then have real progress to destroy."""
     tr = bursty_trace(
         rate_per_gpu * n_gpus, duration_s, seed=seed, cv=4.0,
         tenants=TENANTS, prompt_mean=256, output_mean=160, max_output=320,
+        rt_fraction=rt_fraction,
     )
     rnd = random.Random(seed + 1)
     reqs = [
@@ -198,6 +219,131 @@ def run_sweep(
     return sweep
 
 
+def coordinator_schedule(
+    coord_mtbf_us: float, dur_us: float
+) -> FaultInjector:
+    """Engineered coordinator crash cycles at a fixed cadence. Each cycle
+    fails gpu0 shortly *after* the coordinator goes down and repairs it
+    while the coordinator is still out: the victims strand in coordinator
+    queues, which is exactly the state journal replay reconstructs and a
+    cold restart forfeits."""
+    events = []
+    t = coord_mtbf_us
+    while t + COORD_MTTR_US < dur_us:
+        events += [
+            FaultEvent(t, "coordinator_crash"),
+            FaultEvent(t + 50_000.0, "gpu_fail", gpu="gpu0"),
+            FaultEvent(t + 200_000.0, "gpu_recover", gpu="gpu0"),
+            FaultEvent(t + COORD_MTTR_US, "coordinator_recover"),
+        ]
+        t += coord_mtbf_us
+    return FaultInjector(events)
+
+
+def run_journal_sweep(
+    n_gpus: int = 2,
+    ratio: float = 1.5,
+    rate_per_gpu: float = 1.5,
+    duration_s: float = 6.0,
+    seed: int = 42,
+    coord_mtbfs_us: Sequence[float] = (1_200_000.0, 2_400_000.0),
+) -> Dict[str, object]:
+    """Journal replay vs cold restart across a coordinator-MTBF sweep, on
+    identical fault timelines and an RT-heavy trace. Per point: goodput
+    delta, RT deadline-miss rates (scored by ``ControlPlane.finalize``
+    against the shared ``DEADLINES`` rubric), and the mean completion
+    latency of fault-interrupted requests (the recovery-latency proxy:
+    cold restarts re-run interrupted work from scratch)."""
+    trace = build_trace(
+        n_gpus, rate_per_gpu, duration_s, seed, rt_fraction=RT_FRACTION
+    )
+    foot = mean_request_footprint(trace)
+    cap_per_gpu = int(TARGET_CONCURRENCY * foot / ratio)
+    dur_us = trace.duration_us()
+    horizon_us = dur_us + DRAIN_US
+    sweep: Dict[str, object] = {
+        "n_gpus": n_gpus,
+        "rt_fraction": RT_FRACTION,
+        "coord_mttr_us": COORD_MTTR_US,
+        "n_requests": len(trace),
+        "deadlines": {
+            "rt_ttft_us": DEADLINES.rt_ttft_us,
+            "rt_latency_us": DEADLINES.rt_latency_us,
+        },
+        "coord_mtbf_points": [],
+    }
+    for mtbf in coord_mtbfs_us:
+        schedule = coordinator_schedule(mtbf, dur_us)
+        point: Dict[str, object] = {
+            "coord_mtbf_us": mtbf,
+            "n_fault_events": len(schedule.events),
+            "arms": {},
+            "rt_miss_rate": {},
+            "interrupted_latency_us": {},
+        }
+        for mode in ("journal", "cold"):
+            control = ControlPlane(
+                deadlines=DEADLINES,
+                recovery=mode,
+                replay_check=(mode == "journal"),
+            )
+            t0 = time.perf_counter()
+            rep = simulate_cluster(
+                trace,
+                _fleet(n_gpus, cap_per_gpu),
+                backend="msched",
+                placement="leastloaded",
+                admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+                policy_factory=lambda i: RoundRobinPolicy(MSCHED_Q),
+                page_size=PAGE,
+                slo=SLO,
+                sim_us=horizon_us,
+                rebalance_period_us=REBALANCE_US,
+                faults=schedule,
+                recovery="auto",
+                checkpoint_period_us=CHECKPOINT_US,
+                control=control,
+                audit=True,
+            )
+            row = rep.to_row()
+            row["wall_s"] = time.perf_counter() - t0
+            row["rt_requests"] = control.rt_requests
+            point["arms"][mode] = row
+            point["rt_miss_rate"][mode] = control.deadline_misses / max(
+                1, control.rt_requests
+            )
+            hit = [
+                r.latency_us()
+                for r in rep.merged.requests
+                if r.finished_us is not None
+                and (
+                    "failed_us" in r.meta
+                    or "recovered_from" in r.meta
+                    or "redispatched_from" in r.meta
+                )
+            ]
+            point["interrupted_latency_us"][mode] = (
+                sum(hit) / len(hit) if hit else None
+            )
+        point["goodput_journal_vs_cold"] = (
+            point["arms"]["journal"]["goodput_per_s"]
+            - point["arms"]["cold"]["goodput_per_s"]
+        )
+        sweep["coord_mtbf_points"].append(point)
+    # aggregate RT miss rates over the whole sweep — the headline number
+    for mode in ("journal", "cold"):
+        misses = sum(
+            p["arms"][mode]["deadline_misses"]
+            for p in sweep["coord_mtbf_points"]
+        )
+        rts = sum(
+            p["arms"][mode]["rt_requests"]
+            for p in sweep["coord_mtbf_points"]
+        )
+        sweep[f"rt_miss_{mode}"] = misses / max(1, rts)
+    return sweep
+
+
 def run_chaos(
     n_schedules: int = 25,
     n_gpus: int = 2,
@@ -205,15 +351,25 @@ def run_chaos(
     duration_s: float = 2.0,
     ratio: float = 1.5,
     base_seed: int = 0,
+    coordinator: bool = False,
+    telemetry=None,
 ) -> Dict[str, object]:
     """Seeded randomized chaos suite: every schedule mixes GPU fail/repair
     cycles, link flaps, and task crashes, and runs with the inline auditor
-    raising on any conservation/coherence violation."""
+    raising on any conservation/coherence violation. With ``coordinator``
+    the schedules also crash/recover the control plane itself and every run
+    attaches a journal-recovery :class:`ControlPlane` with ``replay_check``
+    — any replay divergence raises and counts as a violation. ``telemetry``
+    (a hub) traces the first schedule only."""
     runs = []
     violations = 0
+    replays = 0
     for i in range(n_schedules):
         seed = base_seed + i
-        trace = build_trace(n_gpus, rate_per_gpu, duration_s, seed)
+        trace = build_trace(
+            n_gpus, rate_per_gpu, duration_s, seed,
+            rt_fraction=RT_FRACTION if coordinator else 0.0,
+        )
         while not len(trace):  # cv=4 bursts can leave a short window empty
             seed += 7919
             trace = build_trace(n_gpus, rate_per_gpu, duration_s, seed)
@@ -225,6 +381,13 @@ def run_chaos(
             gpu_mtbf_us=900_000.0, gpu_mttr_us=300_000.0,
             link_mtbf_us=1_100_000.0, link_mttr_us=150_000.0,
             crash_mtbf_us=1_300_000.0,
+            coord_mtbf_us=800_000.0 if coordinator else None,
+            coord_mttr_us=300_000.0,
+        )
+        control = (
+            ControlPlane(recovery="journal", replay_check=True)
+            if coordinator
+            else None
         )
         row: Dict[str, object] = {
             "seed": seed,
@@ -246,14 +409,19 @@ def run_chaos(
                 faults=schedule,
                 recovery="auto",
                 checkpoint_period_us=300_000.0,
+                control=control,
                 audit=True,
+                telemetry=telemetry if i == 0 else None,
             )
+            replays += rep.journal_replays
             row.update(
                 faults_applied=rep.faults_applied,
                 recoveries=len(rep.recoveries),
                 finished=rep.stats.n_finished,
                 lost=rep.lost_requests,
                 shed=rep.shed_requests,
+                coordinator_crashes=rep.coordinator_crashes,
+                journal_replays=rep.journal_replays,
                 violation=None,
             )
         except InvariantViolation as exc:  # pragma: no cover - must not happen
@@ -263,11 +431,13 @@ def run_chaos(
     return {
         "n_schedules": n_schedules,
         "n_gpus": n_gpus,
+        "coordinator": coordinator,
         "violations": violations,
         "total_faults_applied": sum(
             r.get("faults_applied", 0) for r in runs
         ),
         "total_recoveries": sum(r.get("recoveries", 0) for r in runs),
+        "total_journal_replays": replays,
         "runs": runs,
     }
 
@@ -283,19 +453,34 @@ def run_bench(
     out_path: Optional[Path] = DEFAULT_OUT,
     strict: bool = True,
     telemetry_path: Optional[Path] = None,
+    coordinator_chaos: bool = False,
+    journal_duration_s: float = 6.0,
+    coord_mtbfs_us: Sequence[float] = (1_200_000.0, 2_400_000.0),
 ) -> Dict[str, object]:
     tel = make_telemetry(telemetry_path)
     report: Dict[str, object] = {
         "benchmark": "fault_recovery",
         "sweep": run_sweep(
             n_gpus, ratio, rate_per_gpu, duration_s, seed, mtbfs_us,
-            telemetry=tel,
+            # with coordinator chaos on, the trace follows the chaos suite
+            telemetry=None if coordinator_chaos else tel,
         ),
-        "chaos": run_chaos(n_schedules=n_chaos, base_seed=seed),
+        "journal": run_journal_sweep(
+            ratio=ratio, rate_per_gpu=rate_per_gpu,
+            duration_s=journal_duration_s, seed=seed,
+            coord_mtbfs_us=coord_mtbfs_us,
+        ),
+        "chaos": run_chaos(
+            n_schedules=n_chaos, base_seed=seed,
+            coordinator=coordinator_chaos,
+            telemetry=tel if coordinator_chaos else None,
+        ),
     }
     export_telemetry(tel, telemetry_path)
     # acceptance: at every injected MTBF, both checkpoint-based arms beat
-    # the cold-restart baseline on goodput, and the chaos suite is clean.
+    # the cold-restart baseline on goodput; the chaos suite is clean; and
+    # journal replay strictly beats a cold coordinator restart on RT
+    # deadline-miss rate (aggregated over the coordinator-MTBF sweep).
     # Smoke configs are too light to separate the arms (every request
     # finishes under any policy), so they gate on no-regression instead.
     recovery_wins = all(
@@ -307,9 +492,18 @@ def run_bench(
         for point in report["sweep"]["mtbf_points"]
         for tag in ("checkpoint", "ckpt+linger")
     )
+    jr = report["journal"]
+    journal_wins = (
+        jr["rt_miss_journal"] < jr["rt_miss_cold"]
+        if strict
+        else jr["rt_miss_journal"] <= jr["rt_miss_cold"]
+    )
     report["recovery_beats_cold_at_every_mtbf"] = recovery_wins
+    report["journal_beats_cold_rt_miss"] = journal_wins
     report["chaos_clean"] = report["chaos"]["violations"] == 0
-    report["meets_target"] = recovery_wins and report["chaos_clean"]
+    report["meets_target"] = (
+        recovery_wins and journal_wins and report["chaos_clean"]
+    )
     if out_path is not None:
         write_json(out_path, report)
     return report
@@ -333,6 +527,18 @@ def run(telemetry_path=None):
                 f"fault_recovery_mtbf{int(point['gpu_mtbf_us'] / 1000)}ms_{tag}",
                 row["wall_s"] * 1e6,
                 derived,
+            ))
+    for point in report["journal"]["coord_mtbf_points"]:
+        for mode in ("journal", "cold"):
+            row = point["arms"][mode]
+            rows.append((
+                f"fault_recovery_coord{int(point['coord_mtbf_us'] / 1000)}"
+                f"ms_{mode}",
+                row["wall_s"] * 1e6,
+                f"goodput={row['goodput_per_s']:.2f}/s;"
+                f"rt_miss={point['rt_miss_rate'][mode]:.3f};"
+                f"replays={row['journal_replays']};"
+                f"crashes={row['coordinator_crashes']}",
             ))
     chaos = report["chaos"]
     rows.append((
@@ -365,6 +571,12 @@ def main() -> None:
         help="fast CI config: 2 GPUs, one MTBF, 3 audited chaos schedules, "
         "no artifact",
     )
+    ap.add_argument(
+        "--coordinator-chaos", action="store_true",
+        help="add coordinator crash/recover cycles to the chaos schedules "
+        "and run each under a replay-checked journal control plane (the CI "
+        "chaos smoke; any replay divergence fails the run)",
+    )
     args = ap.parse_args()
     if args.smoke:
         report = run_bench(
@@ -372,18 +584,22 @@ def main() -> None:
             duration_s=3.0, seed=args.seed,
             mtbfs_us=(800_000.0,), n_chaos=3, out_path=None, strict=False,
             telemetry_path=args.telemetry,
+            coordinator_chaos=args.coordinator_chaos,
+            journal_duration_s=3.0, coord_mtbfs_us=(1_000_000.0,),
         )
     else:
         report = run_bench(
             args.gpus, args.ratio, args.rate, args.duration, args.seed,
             n_chaos=args.chaos, out_path=args.out,
             telemetry_path=args.telemetry,
+            coordinator_chaos=args.coordinator_chaos,
         )
     print_json(report)
     if not report["meets_target"]:
         raise SystemExit(
             "fault recovery benchmark failed acceptance: "
             f"recovery_beats_cold={report['recovery_beats_cold_at_every_mtbf']} "
+            f"journal_beats_cold_rt={report['journal_beats_cold_rt_miss']} "
             f"chaos_clean={report['chaos_clean']}"
         )
 

@@ -35,7 +35,23 @@ from repro.telemetry import SCHEMA, STALL_CATEGORIES, validate_trace  # noqa: E4
 
 def load(path: Path) -> dict:
     with open(path) as f:
-        return json.load(f)
+        doc = json.load(f)
+    if isinstance(doc, list):
+        # a bare event array is the other legal Chrome trace shape;
+        # normalise so every downstream section can .get() on a dict
+        doc = {"traceEvents": doc}
+    return doc
+
+
+def is_empty_trace(doc) -> bool:
+    """True when the document holds no real (non-metadata) events — a
+    zero-event run, not a malformed file."""
+    if not isinstance(doc, dict):
+        return False
+    events = doc.get("traceEvents")
+    return isinstance(events, list) and not any(
+        isinstance(ev, dict) and ev.get("ph") != "M" for ev in events
+    )
 
 
 def run_validate(doc: dict, path: Path) -> int:
@@ -44,6 +60,9 @@ def run_validate(doc: dict, path: Path) -> int:
         print(f"TRACE INVALID: {e}", file=sys.stderr)
     if errors:
         return 1
+    if is_empty_trace(doc):
+        print(f"trace ok: {path} (empty trace — no events recorded)")
+        return 0
     n_events = sum(
         1 for ev in doc.get("traceEvents", []) if ev.get("ph") != "M"
     )
@@ -139,6 +158,9 @@ def coalescing_section(doc: dict) -> None:
 
 
 def run_report(doc: dict, path: Path, top: int) -> int:
+    if not isinstance(doc, dict):
+        print(f"trace report: {path}: not a trace document", file=sys.stderr)
+        return 1
     schema = doc.get("otherData", {}).get("schema")
     if schema != SCHEMA:
         print(
@@ -146,6 +168,9 @@ def run_report(doc: dict, path: Path, top: int) -> int:
             file=sys.stderr,
         )
     print(f"trace report: {path}")
+    if is_empty_trace(doc):
+        print("empty trace — no events recorded")
+        return 0
     summary = doc.get("summary", {})
     if summary:
         print("summary:")

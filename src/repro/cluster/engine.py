@@ -46,8 +46,12 @@ from repro.cluster.prefetch import PeerFetchEvent, PeerPrefetchFabric
 from repro.cluster.topology import ClusterTopology
 from repro.telemetry.hub import TRACK_CLUSTER
 
-# version tag for ClusterReport.to_json artifacts (benchmarks/common.py)
-REPORT_SCHEMA = "cluster-report-v1"
+# version tag for ClusterReport.to_json artifacts (benchmarks/common.py).
+# v2 added the control-plane fields (journal length, replays, coordinator
+# crashes, deadline misses, preemptions, deadline sheds); v1 artifacts are
+# still readable — the new fields default to zero.
+REPORT_SCHEMA = "cluster-report-v2"
+_ACCEPTED_SCHEMAS = ("cluster-report-v1", REPORT_SCHEMA)
 
 
 def _result_to_json(res: SimResult) -> Dict[str, object]:
@@ -146,6 +150,15 @@ class ClusterReport:
     retry_exhausted: int = 0  # continuations whose retry budget ran out
     checkpoints: int = 0
     checkpoint_bytes: int = 0
+    # control-plane accounting (zero on runs without a ControlPlane; the
+    # fields are unconditional so zero-fault rows compare equal with and
+    # without one attached)
+    journal_len: int = 0  # decision-journal records appended
+    journal_replays: int = 0  # journal replays at coordinator recovery
+    coordinator_crashes: int = 0
+    deadline_misses: int = 0  # RT requests that missed TTFT/completion SLO
+    preemptions: int = 0  # BE tasks preempted by deadline enforcement
+    deadline_sheds: int = 0  # BE tasks shed after the escalation ladder
 
     def to_row(self) -> Dict[str, object]:
         """Flatten for JSON artifacts (benchmarks)."""
@@ -179,6 +192,12 @@ class ClusterReport:
             "retry_exhausted": self.retry_exhausted,
             "checkpoints": self.checkpoints,
             "checkpoint_bytes": self.checkpoint_bytes,
+            "journal_len": self.journal_len,
+            "journal_replays": self.journal_replays,
+            "coordinator_crashes": self.coordinator_crashes,
+            "deadline_misses": self.deadline_misses,
+            "preemptions": self.preemptions,
+            "deadline_sheds": self.deadline_sheds,
             "per_gpu": [g.to_row() for g in self.per_gpu],
         }
         row.update(dataclasses.asdict(self.stats))
@@ -227,6 +246,12 @@ class ClusterReport:
             "retry_exhausted": self.retry_exhausted,
             "checkpoints": self.checkpoints,
             "checkpoint_bytes": self.checkpoint_bytes,
+            "journal_len": self.journal_len,
+            "journal_replays": self.journal_replays,
+            "coordinator_crashes": self.coordinator_crashes,
+            "deadline_misses": self.deadline_misses,
+            "preemptions": self.preemptions,
+            "deadline_sheds": self.deadline_sheds,
         }
 
     @classmethod
@@ -234,10 +259,10 @@ class ClusterReport:
         from repro.serving.engine import SLOSpec  # lazy: import edge
 
         schema = doc.get("schema")
-        if schema != REPORT_SCHEMA:
+        if schema not in _ACCEPTED_SCHEMAS:
             raise ValueError(
                 f"unknown cluster-report schema {schema!r} "
-                f"(expected {REPORT_SCHEMA!r})"
+                f"(expected one of {_ACCEPTED_SCHEMAS})"
             )
         return cls(
             backend=doc["backend"],
@@ -275,6 +300,13 @@ class ClusterReport:
             retry_exhausted=doc["retry_exhausted"],
             checkpoints=doc["checkpoints"],
             checkpoint_bytes=doc["checkpoint_bytes"],
+            # v2 fields: absent from v1 artifacts, default 0
+            journal_len=doc.get("journal_len", 0),
+            journal_replays=doc.get("journal_replays", 0),
+            coordinator_crashes=doc.get("coordinator_crashes", 0),
+            deadline_misses=doc.get("deadline_misses", 0),
+            preemptions=doc.get("preemptions", 0),
+            deadline_sheds=doc.get("deadline_sheds", 0),
         )
 
 
@@ -303,6 +335,7 @@ def simulate_cluster(
     shed_threshold: Optional[float] = 1.25,
     shed_rt_threshold: Optional[float] = None,
     retry_backoff_us: float = 0.0,
+    control=None,
     telemetry=None,
 ) -> ClusterReport:
     """Replay ``trace`` across the cluster and report fleet-level serving
@@ -338,6 +371,16 @@ def simulate_cluster(
     ``retry_backoff_us`` layers capped exponential delay onto the
     migration retry protocol (0 keeps retries instant).
 
+    ``control`` attaches a :class:`repro.control.ControlPlane` (fresh per
+    run): it journals every scheduler decision write-ahead, tracks task
+    lifecycle, serves the ``submit``/``cancel``/``status`` API, survives
+    ``coordinator_crash``/``coordinator_recover`` fault events (journal
+    replay or cold restart, per its ``recovery`` mode), and — when built
+    with deadlines — enforces RT SLOs by preempting best-effort work.
+    Schedules containing coordinator events *require* it. On a zero-fault
+    run with no deadline enforcement the control plane is a pure observer:
+    results are bit-for-bit identical to ``control=None``.
+
     ``telemetry`` attaches one :class:`repro.telemetry.Telemetry` hub to
     the whole fleet: every core, the rebalancer, the prefetch fabric, and
     the fault runtime emit into it, rebalance ticks sample the cluster
@@ -351,6 +394,18 @@ def simulate_cluster(
     from repro.serving.engine import SLOSpec, build_events, representative_requests
 
     slo = slo or SLOSpec()
+    if (
+        control is None
+        and faults is not None
+        and any(
+            ev.kind in ("coordinator_crash", "coordinator_recover")
+            for ev in faults.events
+        )
+    ):
+        raise ValueError(
+            "coordinator_crash/coordinator_recover fault events require a "
+            "control plane: pass control=ControlPlane(...)"
+        )
     events = build_events(trace, page_size=page_size)
     footprints = {
         ev.program.task_id: ev.program.footprint_bytes() for ev in events
@@ -441,7 +496,13 @@ def simulate_cluster(
             shed_rt_threshold=shed_rt_threshold,
         )
     auditor = (
-        InvariantAuditor(cores, topology=topology, fabric=fabric, vault=vault)
+        InvariantAuditor(
+            cores,
+            topology=topology,
+            fabric=fabric,
+            vault=vault,
+            control=control,
+        )
         if audit
         else None
     )
@@ -451,6 +512,17 @@ def simulate_cluster(
         for component in (fabric, rebalancer, fault_rt, vault):
             if component is not None:
                 component.telemetry = telemetry
+    if control is not None:
+        control.attach(
+            cores,
+            topology=topology,
+            placement=placement,
+            fabric=fabric,
+            rebalancer=rebalancer,
+            vault=vault,
+            fault_rt=fault_rt,
+            telemetry=telemetry,
+        )
 
     # -- the cluster event loop --------------------------------------------
     try:
@@ -466,7 +538,9 @@ def simulate_cluster(
             t_tick = next_tick if next_tick <= horizon else float("inf")
             t_fault = fault_rt.next_time() if fault_rt else float("inf")
             t_ck = next_ck if next_ck <= horizon else float("inf")
-            T = min(t_ev, t_tick, t_fault, t_ck)
+            t_ctl = control.next_time() if control is not None else float("inf")
+            t_ctl = t_ctl if t_ctl <= horizon else float("inf")
+            T = min(t_ev, t_tick, t_fault, t_ck, t_ctl)
             if T == float("inf"):
                 break
             for core in cores:
@@ -478,28 +552,42 @@ def simulate_cluster(
                 if auditor is not None:
                     auditor.check(T, "fault")
             elif t_ck <= T:
-                vault.snapshot(cores, T)
-                vault.prune(cores, fault_rt.live_extra())
+                # snapshotting is a coordinator decision: skipped while the
+                # control plane is down (the cadence keeps advancing)
+                if control is None or not control.down:
+                    vault.snapshot(cores, T)
+                    vault.prune(cores, fault_rt.live_extra())
                 next_ck += checkpoint_period_us
+            elif t_ctl <= T:
+                # scheduled submit/cancel ops and deadline enforcement;
+                # next_time() is inf while the coordinator is down and when
+                # nothing is scheduled, so runs without ops or deadline
+                # monitoring never reach this branch
+                control.tick(T)
             elif t_ev <= t_tick:
                 ev = events[ev_i]
                 ev_i += 1
-                if fault_rt is not None:
+                if control is not None:
+                    control.on_arrival(ev)
+                elif fault_rt is not None:
                     fault_rt.dispatch(ev)
                 else:
                     gi = placement.place(ev.program, ev.time_us, cores)
                     cores[gi].inject(ev)
                     placed[gi] += 1
             else:
-                moves = rebalancer.tick(cores, T)
-                if fabric is not None:
-                    # lingering copies of finished tasks are garbage
-                    fabric.reap()
-                if telemetry is not None:
-                    telemetry.instant(
-                        "rebalance_tick", TRACK_CLUSTER, T, moves=len(moves)
-                    )
-                    _sample_cluster_probes(telemetry, topology, cores, T)
+                if control is None or not control.down:
+                    # rebalancing (and the directory reap it implies) is
+                    # coordinator work — suspended during an outage
+                    moves = rebalancer.tick(cores, T)
+                    if fabric is not None:
+                        # lingering copies of finished tasks are garbage
+                        fabric.reap()
+                    if telemetry is not None:
+                        telemetry.instant(
+                            "rebalance_tick", TRACK_CLUSTER, T, moves=len(moves)
+                        )
+                        _sample_cluster_probes(telemetry, topology, cores, T)
                 next_tick += rebalance_period_us
                 if auditor is not None:
                     auditor.check(T, "tick")
@@ -530,13 +618,22 @@ def simulate_cluster(
         # balances (leak checks read pool.used)
         fabric.reap(final=True)
     lost_records: List = []
+    if control is not None:
+        # must run before fault_rt.drain_lost(): the control plane accounts
+        # journal-known work that is NOT live in the runtime queues (plus
+        # any backlog arrivals swallowed by a terminal outage), leaving the
+        # live queue items for the runtime drain — no double counting
+        lost_records.extend(control.drain_lost())
     if fault_rt is not None:
         if vault is not None:
             vault.prune(cores, fault_rt.live_extra())
         # work the fleet could never re-place is accounted, not dropped
-        lost_records = fault_rt.drain_lost()
+        lost_records.extend(fault_rt.drain_lost())
         for i in range(len(placed)):
             placed[i] += fault_rt.placed[i]
+    if control is not None:
+        for i in range(len(placed)):
+            placed[i] += control.placed[i]
     if auditor is not None:
         auditor.check(horizon, "final")
 
@@ -552,6 +649,10 @@ def simulate_cluster(
     )
     total_cap = sum(node.hbm_bytes for node in topology.gpus)
     peak = peak_concurrent_bytes(footprints, records)
+    if control is not None:
+        # stamp RT deadline outcomes from the merged records (post-hoc
+        # bookkeeping only — no simulation effect)
+        control.finalize(records)
     report = ClusterReport(
         backend=backend,
         placement=placement.name,
@@ -582,10 +683,17 @@ def simulate_cluster(
         faults_applied=len(fault_rt.applied) if fault_rt else 0,
         recoveries=list(fault_rt.recoveries) if fault_rt else [],
         shed_requests=len(fault_rt.shed_events) if fault_rt else 0,
-        lost_requests=fault_rt.lost if fault_rt else 0,
+        lost_requests=(fault_rt.lost if fault_rt else 0)
+        + (control.lost if control else 0),
         retry_exhausted=rebalancer.exhausted if rebalancer else 0,
         checkpoints=vault.taken if vault else 0,
         checkpoint_bytes=vault.bytes if vault else 0,
+        journal_len=len(control.journal) if control else 0,
+        journal_replays=control.replays if control else 0,
+        coordinator_crashes=control.crashes if control else 0,
+        deadline_misses=control.deadline_misses if control else 0,
+        preemptions=control.preemptions if control else 0,
+        deadline_sheds=control.deadline_sheds if control else 0,
     )
     if telemetry is not None:
         telemetry.finalize_cluster(report)

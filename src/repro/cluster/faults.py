@@ -62,6 +62,7 @@ from repro.core.simulator import (
 )
 from repro.cluster.migration import ResumedTask, checkpoint_roundtrip
 from repro.cluster.topology import HOST, ClusterTopology
+from repro.control.deadline import slo_class_of
 
 FAULT_KINDS = (
     "gpu_fail",
@@ -69,6 +70,8 @@ FAULT_KINDS = (
     "link_degrade",
     "link_restore",
     "task_crash",
+    "coordinator_crash",
+    "coordinator_recover",
 )
 
 
@@ -78,7 +81,9 @@ class FaultEvent:
     ``link`` is the ``(a, b)`` endpoint pair for link events (``factor``
     scales its bandwidth, 0.0 = NVLink edge down); ``task_id`` optionally
     pins which task a ``task_crash`` kills (``None`` = seeded pick among
-    the tasks running at crash time)."""
+    the tasks running at crash time). ``coordinator_crash``/
+    ``coordinator_recover`` tear down and restart the control plane —
+    schedules containing them require ``simulate_cluster(control=...)``."""
 
     time_us: float
     kind: str
@@ -135,14 +140,17 @@ class FaultInjector:
         link_mttr_us: float = 150_000.0,
         link_factor: float = 0.25,
         crash_mtbf_us: Optional[float] = None,
+        coord_mtbf_us: Optional[float] = None,
+        coord_mttr_us: float = 300_000.0,
     ) -> "FaultInjector":
         """Sample a schedule over ``[0, duration_us)``: per-GPU exponential
         fail→repair cycles (``gpu_mtbf_us``/``gpu_mttr_us``), per-link
         degrade→restore flaps (NVLink edges may use any ``link_factor``
         including 0; host PCIe links are clamped to ≥ 0.05 — a GPU with no
-        host path is a failed GPU, not a slow link), and a fleet-wide
-        Poisson crash process (``crash_mtbf_us``). ``None`` disables a
-        fault class. Deterministic for a given seed."""
+        host path is a failed GPU, not a slow link), a fleet-wide Poisson
+        crash process (``crash_mtbf_us``), and coordinator outage cycles
+        (``coord_mtbf_us``/``coord_mttr_us``). ``None`` disables a fault
+        class. Deterministic for a given seed."""
         rnd = random.Random(seed)
         events: List[FaultEvent] = []
         if gpu_mtbf_us:
@@ -180,6 +188,13 @@ class FaultInjector:
             while t < duration_us:
                 events.append(FaultEvent(t, "task_crash"))
                 t += rnd.expovariate(1.0 / crash_mtbf_us)
+        if coord_mtbf_us:
+            t = rnd.expovariate(1.0 / coord_mtbf_us)
+            while t < duration_us:
+                repair = rnd.expovariate(1.0 / coord_mttr_us)
+                events.append(FaultEvent(t, "coordinator_crash"))
+                events.append(FaultEvent(t + repair, "coordinator_recover"))
+                t += repair + rnd.expovariate(1.0 / coord_mtbf_us)
         return cls(events)
 
 
@@ -239,6 +254,8 @@ class CheckpointVault:
         self.deferred = 0  # D2H legs denied by link-graph planning
         # telemetry hub or None; assigned by simulate_cluster when tracing
         self.telemetry = None
+        # ControlPlane or None; assigned by ControlPlane.attach
+        self.control = None
 
     def snapshot(self, cores: Sequence[SimCore], now: float) -> int:
         """Checkpoint every running task on every alive core; returns the
@@ -270,6 +287,15 @@ class CheckpointVault:
                     ready = plan.arrival_us
                 else:
                     ready = now
+                if self.control is not None:
+                    self.control.record(
+                        "checkpoint",
+                        now,
+                        tid,
+                        gpu=core.name,
+                        nbytes=nbytes,
+                        completed=rt.stats.completions,
+                    )
                 if self.stage_dir is not None:
                     runs = checkpoint_roundtrip(
                         self.stage_dir,
@@ -393,6 +419,15 @@ class FaultRuntime:
     ):
         if recovery not in ("auto", "checkpoint", "linger", "cold"):
             raise ValueError(f"unknown recovery mode {recovery!r}")
+        if (
+            shed_threshold is not None
+            and shed_rt_threshold is not None
+            and shed_rt_threshold < shed_threshold
+        ):
+            raise ValueError(
+                "shed_rt_threshold must be >= shed_threshold (RT work "
+                "sheds only after best-effort)"
+            )
         self.events = list(injector.events)
         self.topology = topology
         self.cores = list(cores)
@@ -419,12 +454,25 @@ class FaultRuntime:
 
         # telemetry hub or None; assigned by simulate_cluster when tracing
         self.telemetry = None
+        # ControlPlane or None; assigned by ControlPlane.attach. When set,
+        # every queue decision is journaled write-ahead, and the runtime's
+        # coordinator-side work (placement, flush, shedding, retries) is
+        # gated while the coordinator is down.
+        self.control = None
         self.applied: List[FaultEvent] = []
         self.recoveries: List[RecoveryEvent] = []
         self.shed_events: List[Tuple[float, int, str, str]] = []
         self.crashes = 0
         self.lost = 0  # set by drain_lost()
         self.placed = [0] * len(self.cores)
+
+    # -- control-plane coupling ----------------------------------------------
+    def _ctl_down(self) -> bool:
+        return self.control is not None and self.control.down
+
+    def _journal(self, kind: str, now: float, task_id: int, **payload) -> None:
+        if self.control is not None:
+            self.control.record(kind, now, task_id, **payload)
 
     # -- event-stream interface (the engine's DES loop) ----------------------
     def next_time(self) -> float:
@@ -433,16 +481,27 @@ class FaultRuntime:
             if self._ei < len(self.events)
             else float("inf")
         )
-        if self._retryq:
+        if self._retryq and not self._ctl_down():
             t = min(t, self._retryq[0][0])
         return t
 
-    def apply_due(self, now: float) -> None:
-        """Process every retry and fault event due at or before ``now``."""
-        while self._retryq and self._retryq[0][0] <= now:
+    def drain_due_retries(self, now: float) -> None:
+        """Pop and re-attempt every backoff-denied restore due by ``now``.
+        Also called at ``coordinator_recover``: rebuilt retry entries may
+        carry due times from before the outage."""
+        while (
+            self._retryq
+            and self._retryq[0][0] <= now
+            and not self._ctl_down()
+        ):
             _due, _seq, victim = heapq.heappop(self._retryq)
             prog, completed, rec, origin, attempt = victim
+            self._journal("release", now, prog.task_id, of="requeue")
             self._recover(prog, completed, rec, origin, now, attempt)
+
+    def apply_due(self, now: float) -> None:
+        """Process every retry and fault event due at or before ``now``."""
+        self.drain_due_retries(now)
         while (
             self._ei < len(self.events)
             and self.events[self._ei].time_us <= now
@@ -459,12 +518,16 @@ class FaultRuntime:
         ``gpu_recover`` (or accounted lost at drain)."""
         alive = [(i, c) for i, c in enumerate(self.cores) if not c.failed]
         if not alive:
+            self._journal(
+                "hold", ev.time_us, ev.program.task_id, ev=ev, rec=None
+            )
             self._held.append((ev, None, None))
             return None
         idx = self.placement.place(
             ev.program, ev.time_us, [c for _i, c in alive]
         )
         i, core = alive[idx]
+        self._journal("place", ev.time_us, ev.program.task_id, gpu=core.name)
         core.inject(ev)
         self.placed[i] += 1
         return i
@@ -502,6 +565,12 @@ class FaultRuntime:
                 )
         elif ev.kind == "task_crash":
             self._crash(ev, now)
+        elif ev.kind == "coordinator_crash":
+            # validated at engine construction: these events require a
+            # ControlPlane, so self.control is never None here
+            self.control.crash(now)
+        elif ev.kind == "coordinator_recover":
+            self.control.recover(now)
 
     def _require_core(self, name: str) -> SimCore:
         core = self._by_name.get(name)
@@ -517,6 +586,15 @@ class FaultRuntime:
             # linger copies *on* the device evaporate with its HBM
             self.fabric.drop_gpu(name)
         report = core.fail(now)
+        if self.control is not None:
+            # the failure tears every resident task down — journal before
+            # any re-placement decision references them
+            for victim in report.running:
+                self._journal("fail", now, victim.program.task_id, gpu=name)
+            for ev, _rec, _warm in report.waiting:
+                self._journal("fail", now, ev.program.task_id, gpu=name)
+            for ev, _warm in report.pending:
+                self._journal("fail", now, ev.program.task_id, gpu=name)
         # queued/pending candidates survive (their state is host-side):
         # re-dispatch each, re-pricing any host-DRAM warm set
         for ev, rec, warm in report.waiting:
@@ -554,6 +632,7 @@ class FaultRuntime:
                 _n, tid, core = running[self.rnd.randrange(len(running))]
         if core is None:
             return  # nothing to kill (pinned task not running anywhere)
+        self._journal("fail", now, tid, gpu=core.name, crash=True)
         ej = core.eject(tid)
         if ej.record is not None:
             ej.record.meta["crashed_us"] = now
@@ -591,7 +670,20 @@ class FaultRuntime:
     ) -> None:
         tid = prog.task_id
         alive = [c for c in self.cores if not c.failed]
-        if not alive:
+        if not alive or self._ctl_down():
+            # no placement without an alive GPU — or without a coordinator
+            # to decide one. The node agent journals the parked victim: in
+            # journal mode the record is what replay re-parks after a
+            # coordinator crash wipes this queue.
+            self._journal(
+                "strand",
+                now,
+                tid,
+                prog=prog,
+                completed=completed,
+                rec=rec,
+                origin=origin,
+            )
             self._stranded.append((prog, completed, rec, origin))
             return
         ck = None
@@ -610,6 +702,16 @@ class FaultRuntime:
             target = self._pick(prog, now)
             plan = self.topology.plan_restore(target.name, ck.nbytes, now)
             if plan is not None:
+                self._journal(
+                    "recovery",
+                    now,
+                    tid,
+                    tier="checkpoint",
+                    src=origin,
+                    dst=target.name,
+                    completed=ck.completed,
+                    arrival_us=plan.arrival_us,
+                )
                 if self.fabric is not None:
                     # any surviving linger copy predates the checkpoint's
                     # host-side state — dead once we restore from host
@@ -645,6 +747,17 @@ class FaultRuntime:
                 due = now + min(
                     self.backoff_us * (2.0 ** attempt), self.backoff_cap_us
                 )
+                self._journal(
+                    "requeue",
+                    now,
+                    tid,
+                    prog=prog,
+                    completed=completed,
+                    rec=rec,
+                    origin=origin,
+                    attempt=attempt + 1,
+                    due_us=due,
+                )
                 heapq.heappush(
                     self._retryq,
                     (due, self._seq, (prog, completed, rec, origin, attempt + 1)),
@@ -664,6 +777,16 @@ class FaultRuntime:
             # the linger bookkeeping; admission re-owns them)
             warm = self.fabric.harvest(tid)
             if warm is not None:
+                self._journal(
+                    "recovery",
+                    now,
+                    tid,
+                    tier="linger",
+                    src=origin,
+                    dst=linger_src.name,
+                    completed=0,
+                    arrival_us=now,
+                )
                 linger_src.inject(
                     TaskArrival(
                         now,
@@ -687,6 +810,16 @@ class FaultRuntime:
         if self.fabric is not None:
             self.fabric.release(tid)
         target = self._pick(prog, now)
+        self._journal(
+            "recovery",
+            now,
+            tid,
+            tier="cold",
+            src=origin,
+            dst=target.name,
+            completed=0,
+            arrival_us=now,
+        )
         target.inject(
             TaskArrival(
                 now,
@@ -731,12 +864,16 @@ class FaultRuntime:
         released); ``"auto"``/``"linger"`` retarget or harvest the linger
         copy like the rebalancer would."""
         alive = [c for c in self.cores if not c.failed]
-        if not alive:
+        if not alive or self._ctl_down():
+            self._journal(
+                "hold", now, ev.program.task_id, ev=ev, warm=warm, rec=rec
+            )
             self._held.append((ev, warm, rec))
             return
         idx = self.placement.place(ev.program, now, alive)
         target = alive[idx]
         tid = ev.program.task_id
+        self._journal("place", now, tid, gpu=target.name, origin=origin)
         if self.recovery == "cold":
             if self.fabric is not None:
                 self.fabric.release(tid)
@@ -788,20 +925,52 @@ class FaultRuntime:
 
     def _flush(self, now: float) -> None:
         """A device came back: held arrivals and stranded victims get
-        another shot at placement."""
+        another shot at placement. Flushing is coordinator work — while the
+        coordinator is down the queues keep accumulating, and the control
+        plane flushes them itself at ``coordinator_recover``."""
+        if self._ctl_down():
+            return
         held, self._held = self._held, []
         for ev, warm, rec in held:
+            self._journal("release", now, ev.program.task_id, of="hold")
             self._redispatch(ev, rec, warm, now, "held")
         stranded, self._stranded = self._stranded, []
         for prog, completed, rec, origin in stranded:
+            self._journal("release", now, prog.task_id, of="strand")
             self._recover(prog, completed, rec, origin, now)
+
+    # -- coordinator-crash queue semantics ------------------------------------
+    def wipe_queues(self) -> None:
+        """Coordinator crash under journal recovery: the in-memory queues
+        die with the coordinator, but their unreleased journal records are
+        the durable copy — replay re-parks every item at recovery."""
+        self._held.clear()
+        self._stranded.clear()
+        self._retryq.clear()
+
+    def drop_queues(self, now: float, reason: str) -> List[RequestRecord]:
+        """Coordinator crash under cold recovery: parked work is lost
+        outright (the restarted coordinator has no record of victims not
+        resident on any core). Marks/synthesizes rejected records exactly
+        like end-of-run drain and returns the synthesized ones."""
+        if self.control is not None:
+            for ev, _warm, _rec in self._held:
+                self._journal(
+                    "release", now, ev.program.task_id, of="hold", why=reason
+                )
+            for prog, _c, _rec, _o in self._stranded:
+                self._journal(
+                    "release", now, prog.task_id, of="strand", why=reason
+                )
+            for _due, _seq, (prog, _c, _rec, _o, _a) in self._retryq:
+                self._journal(
+                    "release", now, prog.task_id, of="requeue", why=reason
+                )
+        return self._drop_parked(reason)
 
     # -- graceful degradation -------------------------------------------------
     def _klass(self, ev: TaskArrival) -> str:
-        k = ev.meta.get("slo_class") or getattr(
-            ev.program, "slo_class", None
-        )
-        return k or "be"
+        return slo_class_of(ev.meta, ev.program)
 
     def _core_demand(self, core: SimCore) -> Tuple[int, int]:
         st = core.state_view()
@@ -822,6 +991,8 @@ class FaultRuntime:
         return demand / max(1, cap)
 
     def _shed_pressure(self, now: float) -> None:
+        if self._ctl_down():
+            return  # shedding is a coordinator decision
         self._shed_class(now, frozenset(("be",)), self.shed_threshold)
         self._shed_class(now, None, self.shed_rt_threshold)
 
@@ -867,6 +1038,13 @@ class FaultRuntime:
         """End of run: anything still held/stranded (the fleet never came
         back) is accounted as rejected — never silently dropped. Returns
         records synthesized for work that has no fragment anywhere."""
+        return self._drop_parked(
+            "no_alive_gpu", retry_reason="restore_backoff_unresolved"
+        )
+
+    def _drop_parked(
+        self, reason: str, retry_reason: Optional[str] = None
+    ) -> List[RequestRecord]:
         self.lost += (
             len(self._held) + len(self._stranded) + len(self._retryq)
         )
@@ -874,20 +1052,20 @@ class FaultRuntime:
         for ev, _warm, rec in self._held:
             if rec is not None:
                 rec.rejected = True
-                rec.meta["lost"] = "no_alive_gpu"
+                rec.meta["lost"] = reason
             else:
                 synthesized.append(
                     RequestRecord(
                         ev.program.task_id,
                         ev.time_us,
                         rejected=True,
-                        meta=dict(ev.meta, lost="no_alive_gpu"),
+                        meta=dict(ev.meta, lost=reason),
                     )
                 )
         for prog, completed, rec, origin in self._stranded:
             if rec is not None:
                 rec.rejected = True
-                rec.meta["lost"] = "no_alive_gpu"
+                rec.meta["lost"] = reason
             else:
                 synthesized.append(
                     RequestRecord(
@@ -895,14 +1073,15 @@ class FaultRuntime:
                         0.0,
                         rejected=True,
                         iterations_done=completed,
-                        meta={"lost": "no_alive_gpu", "origin": origin},
+                        meta={"lost": reason, "origin": origin},
                     )
                 )
         # a retry heap drained past the horizon behaves like stranded work
+        rr = retry_reason or reason
         for _due, _seq, (prog, completed, rec, _origin, _a) in self._retryq:
             if rec is not None:
                 rec.rejected = True
-                rec.meta["lost"] = "restore_backoff_unresolved"
+                rec.meta["lost"] = rr
             else:
                 synthesized.append(
                     RequestRecord(
@@ -910,7 +1089,7 @@ class FaultRuntime:
                         0.0,
                         rejected=True,
                         iterations_done=completed,
-                        meta={"lost": "restore_backoff_unresolved"},
+                        meta={"lost": rr},
                     )
                 )
         self._held.clear()

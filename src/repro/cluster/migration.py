@@ -229,6 +229,10 @@ class Rebalancer:
         self.events: List[MigrationEvent] = []
         # telemetry hub or None; assigned by simulate_cluster when tracing
         self.telemetry = None
+        # ControlPlane or None; assigned by ControlPlane.attach. Move and
+        # reroute decisions are journaled write-ahead (before the eject or
+        # inject they commit) so a coordinator crash can replay them.
+        self.control = None
         self._seq = 0
         self._cores: Sequence[SimCore] = ()
         # host-staged checkpoint transfers still parked in host DRAM, by
@@ -246,6 +250,10 @@ class Rebalancer:
                     c, ev, rec, warm
                 )
             )(core)
+
+    def _journal(self, kind: str, now: float, task_id: int, **payload) -> None:
+        if self.control is not None:
+            self.control.record(kind, now, task_id, **payload)
 
     # -- migration retry protocol -------------------------------------------
     def _handle_reject(self, core, ev, rec, warm) -> bool:
@@ -304,6 +312,9 @@ class Rebalancer:
                 self.retry_backoff_cap_us,
             )
         warm = self._retarget_linger(tid, target.name, warm)
+        self._journal(
+            "reroute", now, tid, src=core.name, dst=target.name, via="retry"
+        )
         target.inject(
             TaskArrival(
                 arrival,
@@ -423,6 +434,14 @@ class Rebalancer:
             # a lingering peer copy either follows the retarget (NVLink
             # reachable) or is harvested into the warm runs
             warm = self._retarget_linger(ev.program.task_id, dst.name, warm)
+            self._journal(
+                "reroute",
+                now,
+                ev.program.task_id,
+                src=src.name,
+                dst=dst.name,
+                via="steal",
+            )
             dst.inject(
                 TaskArrival(
                     max(now, ev.time_us),
@@ -451,6 +470,16 @@ class Rebalancer:
         plan = self.topology.plan_transfer(src.name, dst.name, nbytes, now)
         if plan is None:
             return None
+        self._journal(
+            "migrate",
+            now,
+            tid,
+            src=src.name,
+            dst=dst.name,
+            linger=False,
+            nbytes=nbytes,
+            arrival_us=plan.arrival_us,
+        )
         if self.prefetch is not None:
             # a stale linger copy from an earlier visit elsewhere is dead
             # the moment the task's live working set moves through host
@@ -489,6 +518,19 @@ class Rebalancer:
         plan = self.topology.plan_transfer(src.name, dst.name, manifest, now)
         if plan is None:
             return None
+        # journaled with src/dst/arrival: a journal replay rebuilds the
+        # wiped directory entry for the still-lingering copy from this
+        # record (validated against live pool residency)
+        self._journal(
+            "migrate",
+            now,
+            tid,
+            src=src.name,
+            dst=dst.name,
+            linger=True,
+            nbytes=manifest,
+            arrival_us=plan.arrival_us,
+        )
         self.prefetch.release(tid)  # stale copy from an earlier visit
         ej = src.eject(tid, resident_runs=resident, linger=True)
         if ej.record is not None:

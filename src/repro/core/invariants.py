@@ -153,12 +153,19 @@ class InvariantAuditor:
         topology=None,
         fabric=None,
         vault=None,
+        control=None,
         raise_on_violation: bool = True,
     ):
         self.cores = list(cores)
         self.topology = topology
         self.fabric = fabric
         self.vault = vault
+        # ControlPlane or None: while the coordinator is down the directory
+        # is legitimately empty but linger copies survive on the cores, so
+        # the orphaned-copy reverse check is suspended (recovery must close
+        # the window — replay rebuilds the entries or reclaims the copies,
+        # and the post-recovery audit enforces it again)
+        self.control = control
         self.raise_on_violation = raise_on_violation
         self.violations: List[str] = []
         self.checks = 0
@@ -199,7 +206,11 @@ class InvariantAuditor:
                     f"directory: entry {e.task_id} targets unknown GPU {e.dst}"
                 )
         # reverse: every flagged linger copy must be findable via the
-        # directory (else it is unreclaimable — a leak)
+        # directory (else it is unreclaimable — a leak). Suspended while
+        # the coordinator is down: the directory died with it, and the
+        # copies are exactly what recovery must re-hint or reclaim.
+        if self.control is not None and self.control.down:
+            return bad
         hinted = {(e.src, e.task_id) for e in entries}
         for core in self.cores:
             for tid in core.lingering:

@@ -860,6 +860,11 @@ class SimCore:
         # hints) is reaped at finish instead of waiting for the next
         # rebalance tick. None = single-GPU behavior.
         self.finish_hook: Optional[Callable[[int, float], None]] = None
+        # control-plane hook: called with (task_id, event, now) at the three
+        # data-plane lifecycle boundaries ("admitted", "finished",
+        # "rejected") so the cluster control plane can journal them. None =
+        # no control plane attached (the default, and the single-GPU case).
+        self.lifecycle_hook: Optional[Callable[[int, str, float], None]] = None
         # telemetry hub (repro.telemetry.Telemetry) or None; every emission
         # site is guarded, so the None path is exactly the untraced code
         self.telemetry = telemetry
@@ -1061,8 +1066,47 @@ class SimCore:
                     task_id=ev.program.task_id,
                     reason="capacity_shed",
                 )
+            if self.lifecycle_hook is not None:
+                self.lifecycle_hook(ev.program.task_id, "rejected", self.t)
             return ev, rec
         return None
+
+    def cancel_task(self, task_id: int, now: float) -> bool:
+        """Operator cancel (control-plane API): remove the task wherever it
+        lives on this core — running (ejected, pages freed), queued, or
+        pending — and mark its record rejected with a ``cancelled_us``
+        stamp. A pending arrival has no record yet, so one is synthesized
+        (cancelled work is accounted, never silently dropped). Returns
+        True when the task was found here; lifecycle hooks do not fire —
+        the caller journals the cancel itself."""
+        if task_id in self.tasks:
+            ej = self.eject(task_id)
+            if ej.record is not None:
+                ej.record.rejected = True
+                ej.record.meta["cancelled_us"] = now
+            return True
+        for i, (ev, rec, pages) in enumerate(self.waiting):
+            if ev.program.task_id == task_id:
+                del self.waiting[i]
+                self._waiting_pages -= pages
+                self._warm_runs.pop(task_id, None)
+                rec.rejected = True
+                rec.meta["cancelled_us"] = now
+                return True
+        for i, ev in enumerate(self.pending):
+            if ev.program.task_id == task_id:
+                del self.pending[i]
+                self._warm_runs.pop(task_id, None)
+                rec = RequestRecord(
+                    task_id,
+                    ev.time_us,
+                    rejected=True,
+                    meta=dict(ev.meta, cancelled_us=now),
+                )
+                self.records.append(rec)
+                self.rec_by_tid[task_id] = rec
+                return True
+        return False
 
     # -- lifecycle internals -------------------------------------------------
     def _state(self, now: float) -> SimState:
@@ -1109,6 +1153,8 @@ class SimCore:
                 task_id=prog.task_id,
                 queued_us=max(0.0, now - ev.time_us),
             )
+        if self.lifecycle_hook is not None:
+            self.lifecycle_hook(prog.task_id, "admitted", now)
         if rt.finished():
             # degenerate zero-iteration program: it can never produce the
             # completion event that triggers retirement, so retire it here
@@ -1151,6 +1197,8 @@ class SimCore:
             )
         if self.finish_hook is not None:
             self.finish_hook(tid, now)
+        if self.lifecycle_hook is not None:
+            self.lifecycle_hook(tid, "finished", now)
 
     def _drain_waiting(self, now: float) -> None:
         # FIFO re-evaluation of the wait queue: stop at the first candidate
@@ -1185,6 +1233,8 @@ class SimCore:
                         task_id=ev.program.task_id,
                         reason="admission_reject",
                     )
+                if self.lifecycle_hook is not None:
+                    self.lifecycle_hook(ev.program.task_id, "rejected", now)
             else:
                 break
 

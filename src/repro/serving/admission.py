@@ -31,6 +31,7 @@ from repro.core.simulator import (
     active_demand_pages,
 )
 from repro.core.workloads import TaskProgram, footprint_pages  # noqa: F401
+from repro.control.deadline import slo_class_of
 
 
 class AlwaysAdmit(AdmissionController):
@@ -96,11 +97,13 @@ class MSchedAdmission(AdmissionController):
         demand = self._demand_pages(state, quantum)
         candidate = footprint_pages(prog, state.page_size)
         # best-effort work admits against the tighter be_headroom budget so
-        # that degraded fleets keep slack for real-time requests
+        # that degraded fleets keep slack for real-time requests; classify
+        # with the control plane's rule so admission, deadline enforcement,
+        # and shedding all agree on what counts as "rt"
         headroom = self.headroom
         if (
             self.be_headroom is not None
-            and getattr(prog, "slo_class", "be") == "be"
+            and slo_class_of(getattr(prog, "meta", None), prog) == "be"
         ):
             headroom = self.be_headroom
         if demand + candidate <= headroom * state.pool.capacity:

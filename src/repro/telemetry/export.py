@@ -218,15 +218,17 @@ def validate_trace(doc) -> List[str]:
         if ph not in _CHROME_PHASES:
             errors.append(f"event {i} ({name}): unknown phase {ph!r}")
             continue
-        if not isinstance(ts, (int, float)) or ts < 0:
-            errors.append(f"event {i} ({name}): bad ts {ts!r}")
-            continue
         if not isinstance(ev.get("pid"), int) or not isinstance(
             ev.get("tid"), int
         ):
             errors.append(f"event {i} ({name}): missing pid/tid")
             continue
         if ph == "M":
+            # metadata events legally carry no timestamp (Chrome format);
+            # checking ts first used to flag them as "bad ts None"
+            continue
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event {i} ({name}): bad ts {ts!r}")
             continue
         if ph == "X":
             dur = ev.get("dur")

@@ -53,6 +53,12 @@ EVENT_TYPES = frozenset(
         "rebalance_tick",  # i: one rebalancer tick on the cluster track
         "recovery",  # i: one recovery decision for a fault victim
         "finish",  # i: a task retires
+        "coordinator_crash",  # i: control plane lost its volatile state
+        "coordinator_recover",  # i: control plane back up (journal or cold)
+        "journal_replay",  # i: decision-journal replay at recovery
+        "deadline_miss",  # i: an RT task projected to miss its deadline
+        "preempt",  # i: deadline enforcement preempted a BE task
+        "cancel",  # i: operator cancel through the control plane
     }
 )
 

@@ -3,6 +3,8 @@ fail/recover lifecycles, checkpoint vs. linger vs. cold recovery sources,
 link flaps, task crashes, graceful degradation ordering, the retry-exhaustion
 accounting, the linger-lifecycle regression, and a seeded chaos sweep under
 the inline invariant auditor."""
+import math
+
 import pytest
 
 from repro.cluster import (
@@ -507,6 +509,91 @@ def test_shed_rt_threshold_allows_rt_shedding_when_set():
                    shed_rt_threshold=0.1)
     frt._shed_pressure(g0.t)
     assert any(k == "rt" for _t, _tid, k, _c in frt.shed_events)
+
+
+def _queued_core(classes, cap=1 << 30):
+    """One serving core with a pile of queued mixed-class candidates —
+    admission queues everything behind the running request, and one
+    scheduler step past the first timeslice has processed the queue."""
+    g0 = _serving_core("gpu0", req_id=0, output_tokens=200, cap=cap)
+    for i, klass in enumerate(classes):
+        req = Request(100 + i, ARCH, 10_000.0 + i, prompt_tokens=512,
+                      output_tokens=64, slo_class=klass)
+        g0.inject(TaskArrival(
+            req.arrival_us, ServedRequestTask(100 + i, req, page_size=PAGE),
+            meta={"slo_class": klass},
+        ))
+    g0.admission = type("QueueAll", (AdmissionController,), {
+        "decide": lambda self, prog, arrival_us, state: "queue"
+        if state.active else "admit"
+    })()
+    g0.run(400_000.0, final=False)
+    assert len(g0.waiting) >= len(classes)
+    return g0
+
+
+def test_shed_threshold_boundary_is_strict():
+    """The shed loop runs while pressure is *strictly above* the
+    threshold: a fleet at exactly ``shed_threshold`` sheds nothing, and
+    one ulp below the measured pressure sheds."""
+    topo = homogeneous(1, RTX5080, capacity_bytes=1 << 30)
+    g0 = _queued_core(["be", "be", "be", "be"])
+    pressure = _runtime([], topo, [g0], shed_threshold=None).fleet_pressure()
+    assert pressure > 0.0
+    at = _runtime([], topo, [g0], shed_threshold=pressure)
+    at._shed_pressure(g0.t)
+    assert not at.shed_events, "pressure == threshold must not shed"
+    n_waiting = len(g0.waiting)
+    below = _runtime(
+        [], topo, [g0], shed_threshold=math.nextafter(pressure, 0.0)
+    )
+    below._shed_pressure(g0.t)
+    assert below.shed_events, "pressure one ulp above threshold must shed"
+    assert len(g0.waiting) < n_waiting
+
+
+def test_shed_rt_threshold_boundary_is_strict():
+    """Same strictness for the RT rung: an all-RT queue at exactly
+    ``shed_rt_threshold`` survives; one ulp below, RT work is shed."""
+    topo = homogeneous(1, RTX5080, capacity_bytes=1 << 30)
+    g0 = _queued_core(["rt", "rt", "rt"])
+    pressure = _runtime([], topo, [g0], shed_threshold=None).fleet_pressure()
+    at = _runtime([], topo, [g0], shed_threshold=pressure,
+                  shed_rt_threshold=pressure)
+    at._shed_pressure(g0.t)
+    assert not at.shed_events
+    eps = math.nextafter(pressure, 0.0)
+    below = _runtime([], topo, [g0], shed_threshold=eps,
+                     shed_rt_threshold=eps)
+    below._shed_pressure(g0.t)
+    assert any(k == "rt" for _t, _tid, k, _c in below.shed_events)
+
+
+def test_rt_shed_implies_no_be_survivor_in_same_pass():
+    """The BE rung drains completely before the RT rung fires: any pass
+    that sheds an RT candidate has already shed every queued BE one."""
+    topo = homogeneous(1, RTX5080, capacity_bytes=1 << 30)
+    g0 = _queued_core(["be", "rt", "be", "rt", "be"])
+    frt = _runtime([], topo, [g0], shed_threshold=0.1,
+                   shed_rt_threshold=0.1)
+    frt._shed_pressure(g0.t)
+    classes = [k for _t, _tid, k, _c in frt.shed_events]
+    assert "rt" in classes
+    first_rt = classes.index("rt")
+    assert "be" not in classes[first_rt:], \
+        "every BE shed must precede the first RT shed"
+    waiting_classes = {
+        (ev.meta or {}).get("slo_class") for ev, _r, _p in g0.waiting
+    }
+    assert "be" not in waiting_classes, \
+        "an RT shed with a BE survivor violates the degradation order"
+
+
+def test_rt_threshold_below_be_threshold_rejected():
+    topo = homogeneous(1, RTX5080, capacity_bytes=1 << 30)
+    g0 = _serving_core("gpu0")
+    with pytest.raises(ValueError, match="shed_rt_threshold"):
+        _runtime([], topo, [g0], shed_threshold=0.5, shed_rt_threshold=0.4)
 
 
 # --------------------------------------------------------------------------

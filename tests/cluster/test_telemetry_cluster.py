@@ -303,3 +303,50 @@ def test_cluster_report_json_roundtrip():
     assert back.to_json() == rep.to_json()
     with pytest.raises(ValueError):
         ClusterReport.from_json({"schema": "not-a-report"})
+
+
+def test_cluster_report_v2_roundtrips_control_counters():
+    rep = _cluster(telemetry=None)
+    doc = rep.to_json()
+    assert doc["schema"] == "cluster-report-v2"
+    # exercise the v2 fields with non-default values
+    doc["journal_len"] = 41
+    doc["journal_replays"] = 2
+    doc["coordinator_crashes"] = 2
+    doc["deadline_misses"] = 3
+    doc["preemptions"] = 5
+    doc["deadline_sheds"] = 1
+    back = ClusterReport.from_json(json.loads(json.dumps(doc)))
+    assert (
+        back.journal_len, back.journal_replays, back.coordinator_crashes,
+        back.deadline_misses, back.preemptions, back.deadline_sheds,
+    ) == (41, 2, 2, 3, 5, 1)
+    assert back.to_json() == doc
+
+
+def test_cluster_report_reads_v1_documents():
+    """A v1 document (written before the control plane existed) still
+    loads: the control counters default to zero."""
+    rep = _cluster(telemetry=None)
+    doc = rep.to_json()
+    doc["schema"] = "cluster-report-v1"
+    for k in (
+        "journal_len", "journal_replays", "coordinator_crashes",
+        "deadline_misses", "preemptions", "deadline_sheds",
+    ):
+        del doc[k]
+    back = ClusterReport.from_json(doc)
+    assert back.journal_len == 0 and back.coordinator_crashes == 0
+    assert back.deadline_misses == 0 and back.preemptions == 0
+    # re-serialization upgrades to the current schema
+    assert back.to_json()["schema"] == "cluster-report-v2"
+
+
+def test_cluster_report_rejects_unknown_schema():
+    rep = _cluster(telemetry=None)
+    doc = rep.to_json()
+    doc["schema"] = "cluster-report-v99"
+    with pytest.raises(ValueError, match="cluster-report-v1"):
+        ClusterReport.from_json(doc)
+    with pytest.raises(ValueError, match="unknown cluster-report schema"):
+        ClusterReport.from_json({})

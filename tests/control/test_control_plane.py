@@ -1,0 +1,310 @@
+"""Control-plane integration pins: the zero-impact observer guarantee,
+coordinator crash + journal replay vs cold restart, replay idempotence,
+deadline enforcement (preempt -> backoff -> shed), the operator
+submit/cancel/status surface, and wiring validation."""
+import pytest
+
+from repro.cluster import (
+    FaultEvent,
+    FaultInjector,
+    homogeneous,
+    simulate_cluster,
+)
+from repro.control import (
+    CANCELLED,
+    ControlPlane,
+    DeadlineSpec,
+)
+from repro.core.hardware import NVLINK_A100_GBPS, RTX5080
+from repro.core.scheduler import RoundRobinPolicy
+from repro.serving import MSchedAdmission, Request, Trace, poisson_trace
+from repro.telemetry import Telemetry
+
+ARCH = "qwen3-1.7b"
+PAGE = 1 << 20
+NV = NVLINK_A100_GBPS
+
+
+def _trace(rate=6.0, duration=1.2, seed=5, output_mean=120, rt_fraction=0.0):
+    return poisson_trace(
+        rate, duration, seed=seed, tenants=(ARCH,), prompt_mean=64,
+        output_mean=output_mean, max_output=2 * output_mean,
+        rt_fraction=rt_fraction,
+    )
+
+
+def _topo(n=2, cap=4 << 30):
+    return homogeneous(n, RTX5080, capacity_bytes=cap, nvlink_gbps=NV)
+
+
+def _run(trace, topo, *, backend="msched", faults=None, control=None,
+         telemetry=None, **kw):
+    quantum = 2_000.0 if backend == "um" else 350_000.0
+    args = dict(
+        backend=backend, placement="leastloaded",
+        policy_factory=lambda i: RoundRobinPolicy(quantum),
+        page_size=PAGE, drain_factor=20.0,
+    )
+    if backend == "msched":
+        args["admission_factory"] = lambda i: MSchedAdmission(headroom=0.9)
+    args.update(kw)
+    return simulate_cluster(
+        trace, topo, faults=faults, control=control, telemetry=telemetry,
+        **args
+    )
+
+
+def _rec_tuple(r):
+    return (
+        r.task_id, r.arrival_us, r.admitted_us, r.first_iter_us,
+        r.finished_us, r.iterations_done, r.total_iterations, r.rejected,
+    )
+
+
+def _crash_cycle():
+    """A coordinator outage bracketing a GPU fail/recover: the victims
+    strand in coordinator queues until the coordinator returns."""
+    return [
+        FaultEvent(300_000.0, "coordinator_crash"),
+        FaultEvent(400_000.0, "gpu_fail", gpu="gpu0"),
+        FaultEvent(600_000.0, "gpu_recover", gpu="gpu0"),
+        FaultEvent(800_000.0, "coordinator_recover"),
+    ]
+
+
+# --------------------------------------------------------------------------
+# the pure-observer guarantee
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_zero_fault_control_is_bit_for_bit(backend):
+    """A control plane attached to a fault-free run (no deadline
+    enforcement, no scheduled ops) only journals: the report is identical
+    to the plain run in every field except the journal length."""
+    plain = _run(_trace(), _topo(), backend=backend)
+    cp = ControlPlane()
+    ctl = _run(
+        _trace(), _topo(), backend=backend,
+        faults=FaultInjector.none(), control=cp,
+    )
+    a, b = plain.to_row(), ctl.to_row()
+    assert a.pop("journal_len") == 0 and b.pop("journal_len") > 0
+    assert a == b
+    assert [_rec_tuple(r) for r in plain.merged.requests] == [
+        _rec_tuple(r) for r in ctl.merged.requests
+    ]
+    # and the journal saw the full story of every request
+    assert cp.lifecycle.count("FINISHED") == ctl.stats.n_finished
+
+
+def test_generous_deadline_monitoring_is_bit_for_bit():
+    """Deadline monitoring with deadlines nothing can miss never fires:
+    still bit-for-bit the plain run."""
+    plain = _run(_trace(rt_fraction=0.3), _topo())
+    cp = ControlPlane(
+        deadlines=DeadlineSpec(rt_ttft_us=9e9, rt_latency_us=9e9),
+        deadline_period_us=50_000.0,
+    )
+    ctl = _run(
+        _trace(rt_fraction=0.3), _topo(),
+        faults=FaultInjector.none(), control=cp,
+    )
+    a, b = plain.to_row(), ctl.to_row()
+    a.pop("journal_len"), b.pop("journal_len")
+    assert a == b
+    assert ctl.preemptions == 0 and ctl.deadline_misses == 0
+
+
+# --------------------------------------------------------------------------
+# coordinator crash: journal replay vs cold restart
+# --------------------------------------------------------------------------
+
+
+def test_coordinator_faults_require_control():
+    with pytest.raises(ValueError, match="control plane"):
+        _run(_trace(), _topo(), faults=FaultInjector(_crash_cycle()))
+
+
+def test_crash_journal_replay_preserves_completions():
+    """The acceptance pin: a coordinator crash bracketing a GPU failure,
+    recovered by journal replay, completes exactly the tasks the crash-free
+    run completes — and the double-replay check proves replay idempotent
+    at every recovery."""
+    base = _run(
+        _trace(), _topo(),
+        faults=FaultInjector(_crash_cycle()[1:3]),  # gpu fault only
+        recovery="auto", checkpoint_period_us=250_000.0, audit=True,
+    )
+    cp = ControlPlane(recovery="journal", replay_check=True)
+    rep = _run(
+        _trace(), _topo(),
+        faults=FaultInjector(_crash_cycle()),
+        recovery="auto", checkpoint_period_us=250_000.0,
+        control=cp, audit=True,
+    )
+    survivors = {
+        r.task_id for r in base.merged.requests if r.finished_us is not None
+    }
+    replayed = {
+        r.task_id for r in rep.merged.requests if r.finished_us is not None
+    }
+    assert replayed == survivors
+    assert rep.lost_requests == 0
+    assert rep.coordinator_crashes == 1 and rep.journal_replays == 1
+    assert rep.journal_len == len(cp.journal) > 0
+
+
+def test_cold_restart_forfeits_stranded_work():
+    """Same timeline, cold coordinator restart: down-time strandings are
+    dropped at recovery — accounted as lost, never silent."""
+    cp = ControlPlane(recovery="cold")
+    rep = _run(
+        _trace(), _topo(),
+        faults=FaultInjector(_crash_cycle()),
+        recovery="auto", checkpoint_period_us=250_000.0,
+        control=cp, audit=True,
+    )
+    assert rep.lost_requests > 0
+    assert rep.journal_replays == 0
+    # every request still has exactly one resolved record
+    unresolved = [
+        r for r in rep.merged.requests
+        if r.finished_us is None and not r.rejected
+    ]
+    assert not unresolved
+
+
+def test_terminal_coordinator_outage_accounts_everything():
+    """The coordinator dies and never comes back: backlog arrivals and
+    parked work are accounted as lost at drain."""
+    tr = _trace(rate=8.0, duration=0.8, output_mean=60)
+    cp = ControlPlane(recovery="journal")
+    rep = _run(
+        tr, _topo(),
+        faults=FaultInjector([
+            FaultEvent(200_000.0, "coordinator_crash"),
+            FaultEvent(250_000.0, "gpu_fail", gpu="gpu0"),
+            FaultEvent(280_000.0, "gpu_fail", gpu="gpu1"),
+        ]),
+        recovery="auto", control=cp, audit=True,
+    )
+    assert rep.lost_requests > 0
+    assert {r.task_id for r in rep.merged.requests} == {
+        r.req_id for r in tr
+    }
+    unresolved = [
+        r for r in rep.merged.requests
+        if r.finished_us is None and not r.rejected
+    ]
+    assert not unresolved
+
+
+def test_crash_telemetry_events():
+    tel = Telemetry()
+    cp = ControlPlane(recovery="journal")
+    _run(
+        _trace(), _topo(),
+        faults=FaultInjector(_crash_cycle()),
+        recovery="auto", control=cp, audit=True, telemetry=tel,
+    )
+    names = {ev.name for ev in tel.events}
+    assert {"coordinator_crash", "coordinator_recover", "journal_replay"} \
+        <= names
+
+
+# --------------------------------------------------------------------------
+# deadline enforcement
+# --------------------------------------------------------------------------
+
+
+def _overload_run(control):
+    return _run(
+        _trace(rate=14.0, duration=1.5, seed=9, output_mean=300,
+               rt_fraction=0.25),
+        _topo(n=1, cap=2 << 30),
+        faults=FaultInjector.none(), control=control,
+        placement="roundrobin", audit=True,
+    )
+
+
+def test_deadline_preemption_fires_under_overload():
+    cp = ControlPlane(
+        deadlines=DeadlineSpec(rt_ttft_us=100_000.0, rt_latency_us=500_000.0),
+        deadline_period_us=40_000.0,
+    )
+    rep = _overload_run(cp)
+    assert rep.preemptions > 0
+    assert rep.deadline_misses > 0  # finalize scored the misses
+    assert cp.rt_requests > 0
+    # preempted BE victims carry the eject/re-inject trail and still finish
+    preempted = [
+        r for r in rep.merged.requests if "preempted_us" in r.meta
+    ]
+    assert preempted
+    assert rep.stats.n_finished == rep.stats.n_requests
+
+
+def test_escalation_sheds_past_max_preemptions():
+    """One perpetually-at-risk RT task and exactly one BE task: the monitor
+    must re-pick the same victim, and the pick past ``max_preemptions``
+    escalates the preemption to a journaled shed."""
+    tr = Trace([
+        Request(0, ARCH, 0.0, prompt_tokens=64, output_tokens=800,
+                slo_class="rt"),
+        Request(1, ARCH, 10_000.0, prompt_tokens=64, output_tokens=800,
+                slo_class="be"),
+    ])
+    cp = ControlPlane(
+        deadlines=DeadlineSpec(
+            rt_ttft_us=100_000.0, rt_latency_us=1_000_000.0,
+        ),
+        deadline_period_us=40_000.0,
+        max_preemptions=1,  # the second pick of the same victim escalates
+    )
+    rep = _run(
+        # 12 GiB so both model instances are resident concurrently: the
+        # victim must be *running* to be picked, twice
+        tr, _topo(n=1, cap=12 << 30), faults=FaultInjector.none(),
+        control=cp, placement="roundrobin", audit=True,
+        sim_us=6_000_000.0,
+    )
+    assert rep.preemptions == 1 and rep.deadline_sheds == 1
+    (shed,) = [
+        r for r in rep.merged.requests if "deadline_shed_us" in r.meta
+    ]
+    assert shed.task_id == 1 and shed.rejected
+    assert "preempted_us" in shed.meta  # first rung of the ladder fired too
+    assert cp.lifecycle.count("SHED") == 1
+    # the RT task itself is never a victim
+    (rt,) = [r for r in rep.merged.requests if r.task_id == 0]
+    assert not rt.rejected
+
+
+# --------------------------------------------------------------------------
+# operator surface + wiring validation
+# --------------------------------------------------------------------------
+
+
+def test_cancel_api_resolves_the_task():
+    cp = ControlPlane()
+    cp.cancel(1, 500_000.0)  # task 1 runs ~388-740ms on this seed
+    rep = _run(
+        _trace(), _topo(), faults=FaultInjector.none(), control=cp,
+    )
+    assert cp.status(1) == CANCELLED
+    (rec,) = [r for r in rep.merged.requests if r.task_id == 1]
+    assert rec.rejected and "cancelled_us" in rec.meta
+    # cancelling an unknown/terminal task later is a safe no-op
+    assert cp.lifecycle.count("CANCELLED") == 1
+
+
+def test_attach_reuse_and_bad_mode_raise():
+    with pytest.raises(ValueError):
+        ControlPlane(recovery="warmish")
+    cp = ControlPlane()
+    _run(_trace(rate=2.0, duration=0.4), _topo(),
+         faults=FaultInjector.none(), control=cp)
+    with pytest.raises(ValueError):
+        _run(_trace(rate=2.0, duration=0.4), _topo(),
+             faults=FaultInjector.none(), control=cp)

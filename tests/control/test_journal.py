@@ -1,0 +1,75 @@
+"""The write-ahead decision journal: closed kind set, append ordering,
+FIFO hold/release matching, and the primitive-only JSON export."""
+import pytest
+
+from repro.control import JOURNAL_KINDS, DecisionJournal
+
+
+def test_unknown_kind_raises():
+    j = DecisionJournal()
+    with pytest.raises(ValueError):
+        j.append("meteor_strike", 0.0, 1)
+
+
+def test_seq_is_global_append_order():
+    j = DecisionJournal()
+    for k in ("submit", "place", "admit", "finish"):
+        j.append(k, 0.0, 1)
+    assert [r.seq for r in j] == [0, 1, 2, 3]
+    assert len(j) == 4
+
+
+def test_unreleased_fifo_matching():
+    j = DecisionJournal()
+    j.append("hold", 0.0, 1, ev="first")
+    j.append("hold", 1.0, 1, ev="second")
+    j.append("strand", 2.0, 2)
+    j.append("requeue", 3.0, 3)
+    # one release of task 1's holds pops the OLDEST (FIFO)
+    j.append("release", 4.0, 1, of="hold")
+    # a release whose kind does not match leaves the queue alone
+    j.append("release", 5.0, 2, of="hold")
+    open_recs = j.unreleased()
+    assert [(r.kind, r.task_id) for r in open_recs] == [
+        ("hold", 1),
+        ("strand", 2),
+        ("requeue", 3),
+    ]
+    assert open_recs[0].payload["ev"] == "second"
+    # seq-sorted: replay re-parks in decision order
+    assert [r.seq for r in open_recs] == sorted(r.seq for r in open_recs)
+
+
+def test_release_without_hold_is_ignored():
+    j = DecisionJournal()
+    j.append("release", 0.0, 9, of="strand")
+    assert j.unreleased() == []
+
+
+def test_to_json_drops_reference_payloads():
+    j = DecisionJournal()
+
+    class Prog:  # a live sim object that must not leak into the dump
+        pass
+
+    j.append("strand", 5.0, 2, prog=Prog(), completed=7, origin="gpu0")
+    (doc,) = j.to_json()
+    assert doc == {
+        "seq": 0,
+        "time_us": 5.0,
+        "kind": "strand",
+        "task_id": 2,
+        "completed": 7,
+        "origin": "gpu0",
+    }
+
+
+def test_kind_set_is_closed_and_documented():
+    # every kind used across the integration sites is in the set
+    for k in (
+        "submit", "place", "admit", "finish", "reject", "shed", "cancel",
+        "migrate", "reroute", "checkpoint", "recovery", "preempt", "fail",
+        "hold", "strand", "requeue", "release", "crash", "recover",
+    ):
+        assert k in JOURNAL_KINDS
+    assert len(JOURNAL_KINDS) == 19

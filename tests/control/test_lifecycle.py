@@ -1,0 +1,142 @@
+"""Task lifecycle state machine: legal/illegal edges, terminal absorption,
+the journal-kind -> lifecycle-event mapping, and the cold-restart `assume`
+escape hatch."""
+import pytest
+
+from repro.control import (
+    ADMITTED,
+    CANCELLED,
+    CHECKPOINTED,
+    FAILED,
+    FINISHED,
+    LEGAL_EDGES,
+    MIGRATING,
+    RUNNING,
+    SHED,
+    SUBMITTED,
+    TASK_STATES,
+    TERMINAL_STATES,
+    LifecycleError,
+    TaskLifecycle,
+    apply_event,
+)
+from repro.core.invariants import InvariantViolation
+
+
+def test_edge_table_is_closed_over_known_states():
+    assert set(LEGAL_EDGES) == set(TASK_STATES)
+    for dsts in LEGAL_EDGES.values():
+        assert dsts <= set(TASK_STATES)
+    for t in TERMINAL_STATES:
+        assert not LEGAL_EDGES[t], "terminal states have no outgoing edges"
+
+
+def test_happy_path_and_status():
+    lc = TaskLifecycle()
+    lc.submit(7, 0.0)
+    assert lc.state(7) == SUBMITTED
+    lc.transition(7, ADMITTED, 1.0)
+    lc.transition(7, RUNNING, 2.0)
+    lc.transition(7, FINISHED, 3.0)
+    assert lc.state(7) == FINISHED
+    assert lc.since(7) == 3.0
+
+
+def test_illegal_edges_raise_lifecycle_error():
+    lc = TaskLifecycle()
+    lc.submit(1, 0.0)
+    # SUBMITTED -> RUNNING skips admission
+    with pytest.raises(LifecycleError):
+        lc.transition(1, RUNNING, 1.0)
+    # LifecycleError is an InvariantViolation (and hence AssertionError)
+    with pytest.raises(InvariantViolation):
+        lc.transition(1, FINISHED, 1.0)
+    lc.transition(1, ADMITTED, 1.0)
+    lc.transition(1, RUNNING, 2.0)
+    lc.transition(1, FINISHED, 3.0)
+    # terminal states absorb: nothing leaves FINISHED
+    for dst in (RUNNING, CANCELLED, SHED):
+        with pytest.raises(LifecycleError):
+            lc.transition(1, dst, 4.0)
+
+
+def test_duplicate_submit_and_unknown_task_raise():
+    lc = TaskLifecycle()
+    lc.submit(1, 0.0)
+    with pytest.raises(LifecycleError):
+        lc.submit(1, 1.0)
+    with pytest.raises(LifecycleError):
+        lc.transition(99, ADMITTED, 1.0)
+    assert lc.state(99) is None
+
+
+def test_recovery_cycle_edges():
+    """The fault path: RUNNING -> FAILED -> ADMITTED -> RUNNING again."""
+    lc = TaskLifecycle()
+    lc.submit(3, 0.0)
+    lc.transition(3, ADMITTED, 1.0)
+    lc.transition(3, RUNNING, 2.0)
+    lc.transition(3, FAILED, 3.0)
+    lc.transition(3, ADMITTED, 4.0)
+    lc.transition(3, RUNNING, 5.0)
+    lc.transition(3, MIGRATING, 6.0)
+    lc.transition(3, RUNNING, 7.0)
+    lc.transition(3, CHECKPOINTED, 8.0)
+    lc.transition(3, RUNNING, 9.0)
+    lc.transition(3, FINISHED, 10.0)
+
+
+def test_assume_skips_validation_for_cold_restart():
+    lc = TaskLifecycle()
+    lc.assume(5, RUNNING, 1.0)  # never submitted — amnesiac rebuild
+    assert lc.state(5) == RUNNING
+    lc.transition(5, FINISHED, 2.0)
+
+
+def test_apply_event_maps_journal_kinds():
+    lc = TaskLifecycle()
+    apply_event(lc, "submit", 1, 0.0)
+    assert lc.state(1) == SUBMITTED
+    apply_event(lc, "place", 1, 1.0)
+    assert lc.state(1) == ADMITTED
+    apply_event(lc, "admit", 1, 2.0)
+    assert lc.state(1) == RUNNING
+    # checkpoint is a validated double-step through CHECKPOINTED
+    apply_event(lc, "checkpoint", 1, 3.0)
+    assert lc.state(1) == RUNNING
+    apply_event(lc, "preempt", 1, 4.0)
+    assert lc.state(1) == MIGRATING
+    apply_event(lc, "place", 1, 5.0)
+    apply_event(lc, "admit", 1, 6.0)
+    apply_event(lc, "fail", 1, 7.0)
+    assert lc.state(1) == FAILED
+    apply_event(lc, "recovery", 1, 8.0)
+    assert lc.state(1) == ADMITTED
+    # reroute is a validated no-op: legal while ADMITTED
+    apply_event(lc, "reroute", 1, 9.0)
+    assert lc.state(1) == ADMITTED
+    apply_event(lc, "admit", 1, 10.0)
+    apply_event(lc, "finish", 1, 11.0)
+    assert lc.state(1) == FINISHED
+
+
+def test_apply_event_reject_shed_cancel():
+    lc = TaskLifecycle()
+    apply_event(lc, "submit", 1, 0.0)
+    apply_event(lc, "place", 1, 1.0)
+    apply_event(lc, "reject", 1, 2.0)
+    assert lc.state(1) == SHED
+    apply_event(lc, "submit", 2, 0.0)
+    apply_event(lc, "cancel", 2, 1.0)
+    assert lc.state(2) == CANCELLED
+
+
+def test_apply_event_validates_inputs():
+    lc = TaskLifecycle()
+    with pytest.raises(LifecycleError):
+        apply_event(lc, "admit", None, 0.0)  # lifecycle kind needs a task
+    with pytest.raises(LifecycleError):
+        apply_event(lc, "meteor_strike", 1, 0.0)
+    apply_event(lc, "submit", 1, 0.0)
+    with pytest.raises(LifecycleError):
+        apply_event(lc, "reroute", 1, 1.0)  # only ADMITTED/MIGRATING reroute

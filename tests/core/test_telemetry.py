@@ -3,6 +3,9 @@ ledger's conservation law, the telemetry-off bit-for-bit guarantee on the
 core simulator (4 backends, static and serving), and the trace exporters'
 round-trip through the validator."""
 import json
+import subprocess
+import sys
+from pathlib import Path
 
 import pytest
 
@@ -261,6 +264,54 @@ def test_validator_flags_broken_traces():
         },
     }
     assert any("categories sum" in e for e in validate_trace(bad_ledger))
+
+
+def test_validator_accepts_metadata_without_timestamp():
+    """Chrome ``ph: "M"`` metadata events legally carry no ``ts`` — the
+    validator must not flag them (regression: they were reported as
+    'bad ts None')."""
+    doc = {
+        "traceEvents": [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"name": "gpu0"}},
+            {"name": "finish", "ph": "i", "pid": 1, "tid": 0, "ts": 1.0},
+        ],
+    }
+    assert validate_trace(doc) == []
+    # a metadata-only trace (zero-event run) is valid too
+    assert validate_trace({"traceEvents": [
+        {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+         "args": {"name": "gpu0"}},
+    ]}) == []
+
+
+_TRACE_REPORT = (
+    Path(__file__).resolve().parents[2] / "scripts" / "trace_report.py"
+)
+
+
+@pytest.mark.parametrize("doc", [
+    [],                                             # bare-array form
+    {"traceEvents": []},                            # object form, no events
+    {"traceEvents": [                               # metadata-only
+        {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+         "args": {"name": "gpu0"}},
+    ]},
+])
+@pytest.mark.parametrize("mode", [[], ["--validate"]])
+def test_trace_report_handles_empty_traces(tmp_path, doc, mode):
+    """Regression: ``trace_report`` (both modes) used to crash or report
+    a zero-event trace as invalid; it must exit 0 and say the trace is
+    empty rather than broken."""
+    path = tmp_path / "empty.trace"
+    path.write_text(json.dumps(doc))
+    out = subprocess.run(
+        [sys.executable, str(_TRACE_REPORT), str(path), *mode],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "empty trace" in out.stdout
+    assert "TRACE INVALID" not in out.stderr
 
 
 def test_event_taxonomy_is_closed():
