@@ -213,7 +213,11 @@ def main() -> None:
                     help="offered requests/s per GPU")
     ap.add_argument("--duration", type=float, default=6.0)
     ap.add_argument("--seed", type=int, default=42)
-    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument(
+        "--out", type=Path, default=None,
+        help=f"report path (default: {DEFAULT_OUT}; smoke mode writes "
+        "only when --out is given explicitly)",
+    )
     ap.add_argument(
         "--telemetry", type=Path, default=None, metavar="out.trace",
         help="export a Chrome trace of the last policy variant at the "
@@ -227,7 +231,7 @@ def main() -> None:
     if args.smoke:
         report = run_bench(
             gpu_counts=(2,), ratio=args.ratio, rate_per_gpu=args.rate,
-            duration_s=3.0, seed=args.seed, out_path=None,
+            duration_s=3.0, seed=args.seed, out_path=args.out,
             variants=[v for v in POLICY_VARIANTS if v[0] in
                       ("leastloaded", "msched")],
             telemetry_path=args.telemetry,
@@ -235,7 +239,8 @@ def main() -> None:
     else:
         report = run_bench(
             tuple(args.gpus), args.ratio, args.rate, args.duration,
-            args.seed, out_path=args.out, telemetry_path=args.telemetry,
+            args.seed, out_path=args.out or DEFAULT_OUT,
+            telemetry_path=args.telemetry,
         )
     print_json(report)
     if not report["meets_target"]:

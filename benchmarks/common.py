@@ -92,14 +92,16 @@ def print_json(payload: Dict[str, object]) -> None:
     ))
 
 
-def make_telemetry(telemetry_path: Optional[str]):
+def make_telemetry(telemetry_path: Optional[str], metrics_path: Optional[str] = None):
     """Build a :class:`repro.telemetry.Telemetry` hub when a ``--telemetry``
-    path was given, else ``None`` (the benchmark runs untraced)."""
-    if telemetry_path is None:
+    or ``--metrics`` path was given, else ``None`` (the benchmark runs
+    untraced).  Traced hubs carry the metrics registry and the prediction
+    auditor — both are observer-only, so results stay bit-for-bit identical."""
+    if telemetry_path is None and metrics_path is None:
         return None
     from repro.telemetry import Telemetry
 
-    return Telemetry()
+    return Telemetry(metrics=True, audit=True)
 
 
 def export_telemetry(tel, telemetry_path) -> None:
@@ -109,6 +111,16 @@ def export_telemetry(tel, telemetry_path) -> None:
         return
     tel.write_chrome(telemetry_path)
     print(f"telemetry: wrote Chrome trace to {telemetry_path}")
+
+
+def export_metrics(tel, metrics_path) -> None:
+    """Write the hub's versioned ``metrics-report-v1`` JSON artifact
+    (pretty-print or scrape it via ``scripts/msctl.py metrics``). No-op
+    when the benchmark ran untraced or the hub has no registry."""
+    if tel is None or metrics_path is None or tel.metrics is None:
+        return
+    tel.metrics_report().write(metrics_path)
+    print(f"telemetry: wrote metrics report to {metrics_path}")
 
 
 def timed(fn, *args, **kw):

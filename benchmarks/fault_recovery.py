@@ -560,7 +560,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--chaos", type=int, default=25,
                     help="number of randomized audited fault schedules")
-    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument(
+        "--out", type=Path, default=None,
+        help=f"report path (default: {DEFAULT_OUT}; smoke mode writes "
+        "only when --out is given explicitly)",
+    )
     ap.add_argument(
         "--telemetry", type=Path, default=None, metavar="out.trace",
         help="export a Chrome trace of the ckpt+linger arm at the first "
@@ -582,7 +586,7 @@ def main() -> None:
         report = run_bench(
             n_gpus=2, ratio=args.ratio, rate_per_gpu=args.rate,
             duration_s=3.0, seed=args.seed,
-            mtbfs_us=(800_000.0,), n_chaos=3, out_path=None, strict=False,
+            mtbfs_us=(800_000.0,), n_chaos=3, out_path=args.out, strict=False,
             telemetry_path=args.telemetry,
             coordinator_chaos=args.coordinator_chaos,
             journal_duration_s=3.0, coord_mtbfs_us=(1_000_000.0,),
@@ -590,7 +594,7 @@ def main() -> None:
     else:
         report = run_bench(
             args.gpus, args.ratio, args.rate, args.duration, args.seed,
-            n_chaos=args.chaos, out_path=args.out,
+            n_chaos=args.chaos, out_path=args.out or DEFAULT_OUT,
             telemetry_path=args.telemetry,
             coordinator_chaos=args.coordinator_chaos,
         )

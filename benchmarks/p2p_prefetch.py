@@ -240,7 +240,11 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=6.0)
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--hotspot", type=float, default=0.7)
-    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument(
+        "--out", type=Path, default=None,
+        help=f"report path (default: {DEFAULT_OUT}; smoke mode writes "
+        "only when --out is given explicitly)",
+    )
     ap.add_argument(
         "--telemetry", type=Path, default=None, metavar="out.trace",
         help="export a Chrome trace of the nvlink fleet's run",
@@ -254,12 +258,13 @@ def main() -> None:
         report = run_bench(
             n_gpus=2, ratio=args.ratio, rate_per_gpu=args.rate,
             duration_s=3.0, seed=args.seed, hotspot=args.hotspot,
-            out_path=None, telemetry_path=args.telemetry,
+            out_path=args.out, telemetry_path=args.telemetry,
         )
     else:
         report = run_bench(
             args.gpus, args.ratio, args.rate, args.duration, args.seed,
-            args.hotspot, out_path=args.out, telemetry_path=args.telemetry,
+            args.hotspot, out_path=args.out or DEFAULT_OUT,
+            telemetry_path=args.telemetry,
         )
     print_json(report)
     if not report["meets_target"]:

@@ -40,6 +40,7 @@ from repro.serving.lifecycle import ServedRequestTask
 from benchmarks.common import (
     MSCHED_Q,
     UM_Q,
+    export_metrics,
     export_telemetry,
     make_telemetry,
     print_json,
@@ -71,10 +72,11 @@ def run_bench(
     output_mean: int = 32,
     drain_factor: float = 8.0,
     telemetry_path: Optional[Path] = None,
+    metrics_path: Optional[Path] = None,
 ) -> Dict[str, object]:
     # one traced run per invocation: the msched arm at the first (lowest)
     # oversubscription ratio in the sweep
-    tel = make_telemetry(telemetry_path)
+    tel = make_telemetry(telemetry_path, metrics_path)
     trace = poisson_trace(
         rate_rps,
         duration_s,
@@ -139,6 +141,7 @@ def run_bench(
         for r in pressured
     )
     export_telemetry(tel, telemetry_path)
+    export_metrics(tel, metrics_path)
     if out_path is not None:
         write_json(out_path, report)
     return report
@@ -176,10 +179,19 @@ def main() -> None:
         help="tenant architecture (default: paper-llama3-8b for the sweep, "
         "qwen3-1.7b for --requests long-trace mode)",
     )
-    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument(
+        "--out", type=Path, default=None,
+        help=f"report path (default: {DEFAULT_OUT}; smoke mode writes only "
+        "when --out is given explicitly)",
+    )
     ap.add_argument(
         "--telemetry", type=Path, default=None, metavar="out.trace",
         help="export a Chrome trace of the msched arm at the first ratio",
+    )
+    ap.add_argument(
+        "--metrics", type=Path, default=None, metavar="metrics.json",
+        help="export a metrics-report-v1 JSON of the traced arm "
+        "(see scripts/msctl.py metrics)",
     )
     ap.add_argument(
         "--requests", type=int, default=None,
@@ -194,8 +206,8 @@ def main() -> None:
     if args.smoke:
         report = run_bench(
             ratios=[1.5], rate_rps=4.0, duration_s=2.0, seed=args.seed,
-            arch=args.arch or "qwen3-1.7b", out_path=None, output_mean=16,
-            telemetry_path=args.telemetry,
+            arch=args.arch or "qwen3-1.7b", out_path=args.out, output_mean=16,
+            telemetry_path=args.telemetry, metrics_path=args.metrics,
         )
     elif args.requests:
         # long-trace mode: the drain window shrinks to 2x the offered-load
@@ -205,14 +217,15 @@ def main() -> None:
             ratios=args.ratios if args.ratios != [1.0, 1.5, 2.0] else [1.5],
             rate_rps=args.rate,
             duration_s=args.requests / args.rate, seed=args.seed,
-            arch=args.arch or "qwen3-1.7b", out_path=args.out,
+            arch=args.arch or "qwen3-1.7b", out_path=args.out or DEFAULT_OUT,
             drain_factor=2.0, telemetry_path=args.telemetry,
+            metrics_path=args.metrics,
         )
     else:
         report = run_bench(
             args.ratios, args.rate, args.duration, args.seed,
-            args.arch or "paper-llama3-8b", out_path=args.out,
-            telemetry_path=args.telemetry,
+            args.arch or "paper-llama3-8b", out_path=args.out or DEFAULT_OUT,
+            telemetry_path=args.telemetry, metrics_path=args.metrics,
         )
     print_json(report)
     if not report["meets_target"]:

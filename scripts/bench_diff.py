@@ -1,0 +1,249 @@
+#!/usr/bin/env python3
+"""``bench_diff`` — gate the committed benchmark trajectory.
+
+Compares a freshly-generated benchmark report against the committed
+``BENCH_*.json`` artifact and fails (exit 1) when the trajectory
+regresses:
+
+* **Gate keys** (``meets_target``, ``results_identical``,
+  ``recovery_beats_cold_at_every_mtbf``, ``journal_beats_cold_rt_miss``,
+  ``chaos_clean``) are compared wherever both documents carry them —
+  regardless of config — and any ``True -> False`` flip (or a gate that
+  vanished from the fresh report) is a regression. This is the CI mode:
+  smoke configs differ from the committed full-sweep configs, so the
+  boolean gates are the cross-config contract.
+
+* **Numeric metrics** are compared only inside subtrees whose shared
+  *config keys* (seed, oversubscription, n_gpus, page size, MTBF, ...)
+  agree between baseline and fresh — i.e. when the fresh run actually
+  re-ran the committed configuration. Each metric gets a relative
+  tolerance (per-metric table below, 10% default). Wall-clock-derived
+  fields (``wall_s``, ``sim_us_per_wall_s``, wall-ratio speedups) are
+  machine-dependent and always excluded.
+
+Usage:
+  python scripts/bench_diff.py BASELINE FRESH [BASELINE FRESH ...]
+  python scripts/bench_diff.py BENCH_serving.json /tmp/fresh_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+# boolean claims the repo stakes the paper reproduction on: a committed
+# True may never silently become False
+GATE_KEYS = frozenset(
+    {
+        "meets_target",
+        "results_identical",
+        "recovery_beats_cold_at_every_mtbf",
+        "journal_beats_cold_rt_miss",
+        "chaos_clean",
+    }
+)
+
+# identity of a benchmark configuration: numeric comparison is meaningful
+# only where every shared config key matches
+CONFIG_KEYS = frozenset(
+    {
+        "benchmark",
+        "scenario",
+        "seed",
+        "arch",
+        "tenants",
+        "oversubscription",
+        "ratio",
+        "rate_rps",
+        "rate_per_gpu",
+        "duration_s",
+        "n_gpus",
+        "page_size",
+        "page_kib",
+        "capacity_bytes",
+        "cap_per_gpu_bytes",
+        "capacity_bytes_per_gpu",
+        "n_requests",
+        "n_schedules",
+        "n_fault_events",
+        "gpu_mtbf_us",
+        "gpu_mttr_us",
+        "coord_mtbf_us",
+        "coord_mttr_us",
+        "mtbf_us",
+        "horizon_us",
+        "checkpoint_period_us",
+        "rt_fraction",
+        "hotspot_fraction",
+        "nvlink_gbps",
+        "planning",
+        "pool",
+        "tasks",
+        "backend",
+        "placement",
+        "scale",
+    }
+)
+
+# wall-clock-derived fields: machine-dependent, never diffed
+_WALL_EXACT = frozenset(
+    {
+        "speedup",
+        "speedup_vs_pr1",
+        "target_speedup",
+        "target_sweep_speedup_vs_pr1",
+        "pr1_baseline_sim_us_per_wall_s",
+    }
+)
+
+
+def _is_wall_key(key: str) -> bool:
+    return "wall" in key or key in _WALL_EXACT
+
+
+# per-metric relative tolerances; anything numeric not listed gets DEFAULT_REL
+TOLERANCES: Dict[str, float] = {
+    "goodput_per_s": 0.05,
+    "throughput_per_s": 0.05,
+    "goodput_ratio": 0.05,
+    "goodput_gain_vs_leastloaded": 0.05,
+    "ws_move_speedup": 0.05,
+    "ttft_p50_us": 0.10,
+    "ttft_p99_us": 0.15,
+    "tpot_p50_us": 0.10,
+    "tpot_p99_us": 0.15,
+    "latency_p50_us": 0.10,
+    "latency_p99_us": 0.15,
+    "rt_miss_rate": 0.10,
+    # deterministic simulator outputs: same config must reproduce exactly
+    "sim_us": 0.0,
+    "faults": 0.0,
+    "switches": 0.0,
+    "migrated_bytes": 0.0,
+    "completions": 0.0,
+    "control_us": 0.0,
+}
+DEFAULT_REL = 0.10
+
+
+class Diff:
+    """One comparison's accumulated findings."""
+
+    def __init__(self) -> None:
+        self.gate_failures: List[str] = []
+        self.numeric_failures: List[str] = []
+        self.compared_numeric = 0
+        self.compared_gates = 0
+        self.skipped_config = 0
+
+
+def _config_matches(base: dict, fresh: dict) -> bool:
+    for k in CONFIG_KEYS:
+        if k in base and k in fresh and base[k] != fresh[k]:
+            return False
+    return True
+
+
+def _rel_dev(a: float, b: float) -> float:
+    if a == b:
+        return 0.0
+    denom = max(abs(a), abs(b))
+    return abs(a - b) / denom if denom else 0.0
+
+
+def _walk(path: str, base, fresh, diff: Diff, config_ok: bool) -> None:
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        config_ok = config_ok and _config_matches(base, fresh)
+        if not config_ok:
+            diff.skipped_config += 1
+        for k in sorted(set(base) & set(fresh)):
+            sub = f"{path}.{k}" if path else k
+            bv, fv = base[k], fresh[k]
+            if k in GATE_KEYS:
+                diff.compared_gates += 1
+                if bv is True and fv is not True:
+                    diff.gate_failures.append(
+                        f"GATE {sub}: baseline True -> fresh {fv!r}"
+                    )
+                continue
+            if _is_wall_key(k):
+                continue
+            _walk(sub, bv, fv, diff, config_ok)
+        # a gate the fresh report dropped entirely is also a regression
+        for k in sorted(set(base) - set(fresh)):
+            if k in GATE_KEYS and base[k] is True:
+                sub = f"{path}.{k}" if path else k
+                diff.compared_gates += 1
+                diff.gate_failures.append(
+                    f"GATE {sub}: baseline True -> missing from fresh report"
+                )
+        return
+    if isinstance(base, list) and isinstance(fresh, list):
+        # pair rows positionally; per-row config keys (oversubscription,
+        # n_gpus, page_kib, mtbf, ...) still guard the numeric comparison
+        for i, (bv, fv) in enumerate(zip(base, fresh)):
+            _walk(f"{path}[{i}]", bv, fv, diff, config_ok)
+        return
+    if isinstance(base, bool) or isinstance(fresh, bool):
+        return  # non-gate booleans carry no trajectory contract
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        if not config_ok:
+            return
+        key = path.rsplit(".", 1)[-1].split("[")[0]
+        tol = TOLERANCES.get(key, DEFAULT_REL)
+        diff.compared_numeric += 1
+        dev = _rel_dev(float(base), float(fresh))
+        if dev > tol:
+            diff.numeric_failures.append(
+                f"{path}: baseline={base!r} fresh={fresh!r} "
+                f"(rel dev {dev * 100:.1f}% > tol {tol * 100:.1f}%)"
+            )
+
+
+def compare(baseline: Path, fresh: Path) -> Tuple[Diff, bool]:
+    base = json.loads(baseline.read_text())
+    new = json.loads(fresh.read_text())
+    diff = Diff()
+    _walk("", base, new, diff, config_ok=True)
+    ok = not diff.gate_failures and not diff.numeric_failures
+    return diff, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument(
+        "pairs", nargs="+", type=Path,
+        metavar="BASELINE FRESH",
+        help="alternating baseline/fresh report paths",
+    )
+    args = ap.parse_args(argv)
+    if len(args.pairs) % 2:
+        ap.error("need an even number of paths (BASELINE FRESH pairs)")
+
+    failures = 0
+    for baseline, fresh in zip(args.pairs[::2], args.pairs[1::2]):
+        diff, ok = compare(baseline, fresh)
+        verdict = "OK" if ok else "REGRESSION"
+        print(
+            f"[{verdict}] {baseline.name} vs {fresh}: "
+            f"{diff.compared_gates} gate(s), "
+            f"{diff.compared_numeric} numeric metric(s) compared, "
+            f"{diff.skipped_config} subtree(s) skipped (config mismatch)"
+        )
+        for line in diff.gate_failures + diff.numeric_failures:
+            print(f"  {line}")
+        if not ok:
+            failures += 1
+    if failures:
+        print(f"bench_diff: {failures} report(s) regressed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,10 +20,20 @@ Three subcommands:
     the recovery path as a command: the dump alone reconstructs the
     fleet's task states.
 
+``metrics [report.json] [--prom] [--demo]``
+    Pretty-print a ``metrics-report-v1`` artifact (counters, gauges,
+    histogram percentiles, prediction-audit block), or re-emit it as
+    Prometheus text exposition with ``--prom``. With ``--demo``, run the
+    demo fleet with the metrics registry and the online prediction
+    auditor attached, tail the per-rebalance-tick rollups, and print
+    fleet prediction health next to the deadline counters.
+
 Usage:
   python scripts/msctl.py demo [--crash] [--journal-out /tmp/journal.json]
   python scripts/msctl.py journal /tmp/journal.json
   python scripts/msctl.py status /tmp/journal.json [--task 3]
+  python scripts/msctl.py metrics report.json [--prom]
+  python scripts/msctl.py metrics --demo [--out report.json]
 """
 from __future__ import annotations
 
@@ -54,7 +64,10 @@ _ORDER = (
 _NON_LIFECYCLE = {"crash", "recover", "hold", "strand", "requeue", "release"}
 
 
-def cmd_demo(args) -> int:
+def _run_demo_fleet(crash: bool, telemetry=None):
+    """The shared demo fleet: 2x RTX5080, journal control plane, one
+    operator cancel, optional coordinator crash/recover cycle. Returns
+    ``(report, control)`` — the caller picks what to print."""
     from repro.cluster import (
         FaultEvent,
         FaultInjector,
@@ -74,7 +87,7 @@ def cmd_demo(args) -> int:
         FaultEvent(450_000.0, "gpu_fail", gpu="gpu0"),
         FaultEvent(650_000.0, "gpu_recover", gpu="gpu0"),
         FaultEvent(800_000.0, "coordinator_recover"),
-    ] if args.crash else []
+    ] if crash else []
     control = ControlPlane(recovery="journal", replay_check=True)
     # operator ops scheduled through the CLI surface: cancel one task
     # mid-run to show the lifecycle edge in the journal
@@ -91,7 +104,27 @@ def cmd_demo(args) -> int:
         page_size=1 << 20,
         faults=FaultInjector(faults) if faults else FaultInjector.none(),
         control=control, audit=True, drain_factor=20.0,
+        telemetry=telemetry,
     )
+    return rep, control
+
+
+def _print_prediction_health(control) -> None:
+    health = control.prediction_health()
+    if health is None:
+        return
+    print(
+        "prediction: F-={false_negative_pct:.2f}% "
+        "F+={false_positive_pct:.2f}% "
+        "drift={template_drift_pp:+.2f}pp over {audited_commands} commands "
+        "/ {audited_quanta} quanta, "
+        "overfetch={overfetch_bytes}B "
+        "underfetch-stall={underfetch_stall_us:.0f}us".format(**health)
+    )
+
+
+def cmd_demo(args) -> int:
+    rep, control = _run_demo_fleet(args.crash)
     print(
         f"demo run: {rep.stats.n_requests} requests, "
         f"{rep.stats.n_finished} finished, {rep.lost_requests} lost, "
@@ -162,6 +195,88 @@ def cmd_status(args) -> int:
     return 0
 
 
+def _fmt_value(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def cmd_metrics(args) -> int:
+    if args.demo:
+        from repro.telemetry import Telemetry
+
+        tel = Telemetry(metrics=True, audit=True)
+        rep, control = _run_demo_fleet(args.crash, telemetry=tel)
+        report = tel.metrics_report()
+        tail = report.rollups[-args.tail:] if args.tail else report.rollups
+        for row in tail:
+            keys = sorted(row["values"])
+            shown = ", ".join(
+                f"{k}={_fmt_value(row['values'][k])}" for k in keys[:6]
+            )
+            more = f" (+{len(keys) - 6} keys)" if len(keys) > 6 else ""
+            print(f"rollup @ {row['ts_us'] / 1e3:>10.1f}ms  {shown}{more}")
+        print(
+            f"deadlines: {control.deadline_misses} missed of "
+            f"{control.rt_requests} rt requests, "
+            f"{control.preemptions} preemption(s)"
+        )
+        _print_prediction_health(control)
+        if args.out is not None:
+            report.write(args.out)
+            print(f"metrics: wrote {args.out}")
+        return 0
+
+    if args.report is None:
+        raise SystemExit("metrics: need a report path (or --demo)")
+    from repro.telemetry import MetricsReport
+
+    report = MetricsReport.from_json(json.loads(args.report.read_text()))
+    if args.prom:
+        sys.stdout.write(report.to_prometheus())
+        return 0
+    doc = report.to_json()
+    print(
+        f"schema: {doc['schema']}  "
+        f"generated @ {report.generated_us / 1e3:.1f}ms"
+    )
+    by_kind = {"counter": [], "gauge": [], "histogram": []}
+    for r in doc["metrics"]:
+        by_kind[r["kind"]].append(r)
+    for kind in ("counter", "gauge"):
+        rows = by_kind[kind]
+        if rows:
+            print(f"{kind}s ({len(rows)}):")
+            for r in sorted(rows, key=lambda r: (r["name"], r["track"])):
+                print(
+                    f"  {r['name']:<32} track={r['track']:<10} "
+                    f"{_fmt_value(r['value'])}"
+                )
+    hists = by_kind["histogram"]
+    if hists:
+        print(f"histograms ({len(hists)}):")
+        for r in sorted(hists, key=lambda r: (r["name"], r["track"])):
+            print(
+                f"  {r['name']:<32} track={r['track']:<10} "
+                f"n={r['count']} p50={_fmt_value(r['p50'])} "
+                f"p99={_fmt_value(r['p99'])} sum={_fmt_value(r['sum'])}"
+            )
+    if report.rollups:
+        print(f"rollups: {len(report.rollups)} banked")
+    audit = doc.get("audit")
+    if audit:
+        fleet = audit["fleet"]
+        print(
+            "prediction audit: F-={:.2f}% F+={:.2f}% over {} commands "
+            "({} templates, {} tasks)".format(
+                fleet["false_negative_pct"], fleet["false_positive_pct"],
+                fleet["commands"], len(audit["per_template"]),
+                len(audit["per_task"]),
+            )
+        )
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
@@ -183,6 +298,22 @@ def main() -> int:
     st.add_argument("--task", type=int, default=None,
                     help="show one task's state instead of the summary")
     st.set_defaults(fn=cmd_status)
+    mt = sub.add_parser(
+        "metrics", help="pretty-print a metrics report or tail a demo run"
+    )
+    mt.add_argument("report", type=Path, nargs="?", default=None,
+                    help="a metrics-report-v1 JSON artifact")
+    mt.add_argument("--prom", action="store_true",
+                    help="emit Prometheus text exposition instead")
+    mt.add_argument("--demo", action="store_true",
+                    help="run the demo fleet traced and tail live rollups")
+    mt.add_argument("--crash", action="store_true",
+                    help="(with --demo) inject a coordinator crash cycle")
+    mt.add_argument("--tail", type=int, default=8,
+                    help="(with --demo) show the last N rollup rows")
+    mt.add_argument("--out", type=Path, default=None,
+                    help="(with --demo) also write the report JSON here")
+    mt.set_defaults(fn=cmd_metrics)
     args = ap.parse_args()
     return args.fn(args)
 

@@ -16,7 +16,13 @@ benchmark run (or ``Telemetry.write_chrome``):
 validity, monotone timestamps, balanced begin/end pairs, exact stall-ledger
 conservation) and exits non-zero on any error — the CI telemetry smoke.
 
-Usage: python scripts/trace_report.py out.trace [--validate] [--top 10]
+``--json`` emits the same report machine-readably: one JSON document with
+``summary``, ``stalls`` (ranked sources + totals), ``links`` (per-link
+peak/mean in-flight bytes, peak sharers), and ``coalescing`` (pages per
+planned migration, per-track plan origins) — the shape the round-trip
+test in ``tests/core/test_metrics_audit.py`` pins.
+
+Usage: python scripts/trace_report.py out.trace [--validate|--json] [--top 10]
 """
 from __future__ import annotations
 
@@ -87,11 +93,9 @@ def _track_names(doc: dict) -> dict:
     }
 
 
-def stall_section(doc: dict, top: int) -> None:
+def stall_data(doc: dict, top: int = 10) -> dict:
+    """The stall section as data: per-category totals ranked by µs."""
     ledger = doc.get("stallLedger", {})
-    if not ledger:
-        print("stall ledger: (empty — no finished tasks in the trace)")
-        return
     totals = {cat: 0.0 for cat in STALL_CATEGORIES}
     wall = non_compute = 0.0
     for row in ledger.values():
@@ -99,43 +103,50 @@ def stall_section(doc: dict, top: int) -> None:
             totals[cat] += row.get(cat, 0.0)
         wall += row.get("wall_us", 0.0)
         non_compute += row.get("non_compute_us", 0.0)
-    print(
-        f"stall ledger: {len(ledger)} tasks, "
-        f"{wall / 1e6:.3f}s wall, {non_compute / 1e6:.3f}s non-compute "
-        f"({100.0 * non_compute / wall if wall else 0.0:.1f}%)"
-    )
-    print("top stall sources:")
     ranked = sorted(totals.items(), key=lambda kv: -kv[1])[:top]
-    for cat, us in ranked:
-        share = 100.0 * us / non_compute if non_compute else 0.0
-        print(f"  {cat:<20} {us / 1e6:>10.4f}s  {share:5.1f}%")
+    return {
+        "tasks": len(ledger),
+        "wall_us": wall,
+        "non_compute_us": non_compute,
+        "top_sources": [
+            {
+                "category": cat,
+                "us": us,
+                "share_pct": 100.0 * us / non_compute if non_compute else 0.0,
+            }
+            for cat, us in ranked
+        ],
+    }
 
 
-def link_section(doc: dict) -> None:
+def link_data(doc: dict) -> list:
+    """The link heatmap as data: per-link peak/mean in-flight + sharers."""
     probes = doc.get("probes", {})
     links: dict = defaultdict(dict)
     for key, points in probes.items():
         track, _, name = key.rpartition("/")
         if track.startswith("link:"):
             links[track[len("link:"):]][name] = [v for _t, v in points]
-    if not links:
-        print("link heatmap: (no link probes — single-GPU or unsampled run)")
-        return
-    print("link heatmap:")
-    print(f"  {'link':<18} {'peak inflight':>14} {'mean inflight':>14} "
-          f"{'peak sharers':>13}")
+    out = []
     for link in sorted(links):
         vals = links[link]
         inflight = vals.get("inflight_bytes", [0])
         sharers = vals.get("sharers", [0])
-        mean = sum(inflight) / len(inflight) if inflight else 0.0
-        print(
-            f"  {link:<18} {max(inflight) / 1e6:>12.2f}MB "
-            f"{mean / 1e6:>12.2f}MB {max(sharers, default=0):>13}"
+        out.append(
+            {
+                "link": link,
+                "peak_inflight_bytes": max(inflight, default=0),
+                "mean_inflight_bytes": (
+                    sum(inflight) / len(inflight) if inflight else 0.0
+                ),
+                "peak_sharers": max(sharers, default=0),
+            }
         )
+    return out
 
 
-def coalescing_section(doc: dict) -> None:
+def coalescing_data(doc: dict) -> dict:
+    """Fault coalescing as data: pages moved per planned migration."""
     names = _track_names(doc)
     plans = 0
     pages = 0
@@ -145,14 +156,73 @@ def coalescing_section(doc: dict) -> None:
             plans += 1
             pages += int(ev.get("args", {}).get("pages", 0))
             per_track[names.get(ev.get("pid"), "?")] += 1
-    ratio = pages / max(1, plans)
+    return {
+        "planned_migrations": plans,
+        "pages_moved": pages,
+        "pages_per_migration": pages / max(1, plans),
+        "plan_origins": dict(sorted(per_track.items())),
+    }
+
+
+def json_report(doc: dict, top: int = 10) -> dict:
+    """The machine-readable report behind ``--json``."""
+    return {
+        "schema": doc.get("otherData", {}).get("schema"),
+        "empty": is_empty_trace(doc),
+        "summary": doc.get("summary", {}),
+        "dropped_events": doc.get("dropped_events", 0),
+        "stalls": stall_data(doc, top),
+        "links": link_data(doc),
+        "coalescing": coalescing_data(doc),
+    }
+
+
+def stall_section(doc: dict, top: int) -> None:
+    data = stall_data(doc, top)
+    if not data["tasks"]:
+        print("stall ledger: (empty — no finished tasks in the trace)")
+        return
+    wall, non_compute = data["wall_us"], data["non_compute_us"]
     print(
-        f"fault coalescing: {plans} planned migrations moved {pages} pages "
-        f"-> {ratio:.1f} faults avoided per migration"
+        f"stall ledger: {data['tasks']} tasks, "
+        f"{wall / 1e6:.3f}s wall, {non_compute / 1e6:.3f}s non-compute "
+        f"({100.0 * non_compute / wall if wall else 0.0:.1f}%)"
     )
-    if per_track:
+    print("top stall sources:")
+    for row in data["top_sources"]:
+        print(
+            f"  {row['category']:<20} {row['us'] / 1e6:>10.4f}s  "
+            f"{row['share_pct']:5.1f}%"
+        )
+
+
+def link_section(doc: dict) -> None:
+    links = link_data(doc)
+    if not links:
+        print("link heatmap: (no link probes — single-GPU or unsampled run)")
+        return
+    print("link heatmap:")
+    print(f"  {'link':<18} {'peak inflight':>14} {'mean inflight':>14} "
+          f"{'peak sharers':>13}")
+    for row in links:
+        print(
+            f"  {row['link']:<18} "
+            f"{row['peak_inflight_bytes'] / 1e6:>12.2f}MB "
+            f"{row['mean_inflight_bytes'] / 1e6:>12.2f}MB "
+            f"{row['peak_sharers']:>13}"
+        )
+
+
+def coalescing_section(doc: dict) -> None:
+    data = coalescing_data(doc)
+    print(
+        f"fault coalescing: {data['planned_migrations']} planned migrations "
+        f"moved {data['pages_moved']} pages "
+        f"-> {data['pages_per_migration']:.1f} faults avoided per migration"
+    )
+    if data["plan_origins"]:
         origin = ", ".join(
-            f"{tr}:{n}" for tr, n in sorted(per_track.items())
+            f"{tr}:{n}" for tr, n in data["plan_origins"].items()
         )
         print(f"  plan origins: {origin}")
 
@@ -195,12 +265,26 @@ def main() -> int:
         help="check schema/monotonicity/pairing/ledger-conservation and "
         "exit non-zero on any error",
     )
+    ap.add_argument(
+        "--json", action="store_true",
+        help="emit the report as one machine-readable JSON document",
+    )
     ap.add_argument("--top", type=int, default=10,
                     help="stall categories to show in the report")
     args = ap.parse_args()
     doc = load(args.trace)
     if args.validate:
         return run_validate(doc, args.trace)
+    if args.json:
+        if not isinstance(doc, dict):
+            print(
+                f"trace report: {args.trace}: not a trace document",
+                file=sys.stderr,
+            )
+            return 1
+        json.dump(json_report(doc, args.top), sys.stdout, indent=2)
+        sys.stdout.write("\n")
+        return 0
     return run_report(doc, args.trace, args.top)
 
 

@@ -201,6 +201,16 @@ class ControlPlane:
         every task while the coordinator is down — the map is volatile)."""
         return self.lifecycle.state(task_id)
 
+    def prediction_health(self) -> Optional[dict]:
+        """Fleet prediction-accuracy gauges from the online auditor, so
+        operators see template health next to the deadline counters.  None
+        when the run is untraced or the hub has no auditor attached."""
+        tel = self.telemetry
+        aud = getattr(tel, "audit", None) if tel is not None else None
+        if aud is None or not aud.fleet.commands:
+            return None
+        return aud.health()
+
     # -- engine interface -----------------------------------------------------
     def next_time(self) -> float:
         if self.down:

@@ -46,6 +46,10 @@ class SwitchReport:
     populated_pages: int
     evicted_pages: int
     wall_clock_coordinator_s: float  # real measured Python time (Fig. 11)
+    # the template-predicted cut for the quantum (the populate plan before
+    # residency filtering) — read only by the telemetry prediction auditor;
+    # empty on the legacy path, which plans from page lists, not runs
+    predicted_runs: "Tuple[PageRun, ...] | List[PageRun]" = ()
 
 
 class TaskHelper:
@@ -259,6 +263,7 @@ class Coordinator:
                 populated_pages=0,
                 evicted_pages=0,
                 wall_clock_coordinator_s=time.perf_counter() - wall0,
+                predicted_runs=first_runs,
             )
 
         # --- enforce OPT: walk the timeline in REVERSE, madvise to tail ----
@@ -278,13 +283,17 @@ class Coordinator:
                 next_task, populated_runs, evicted_pages, now
             )
             if tiered is not None:
-                return self._report(
+                rep = self._report(
                     wall0, madvise_us, tiered,
                     run_page_count(populated_runs), evicted_pages,
                 )
-        return self._finish_switch_runs(
+                rep.predicted_runs = first_runs
+                return rep
+        rep = self._finish_switch_runs(
             wall0, madvise_us, populated_runs, evicted_pages
         )
+        rep.predicted_runs = first_runs
+        return rep
 
     def _opt_order(
         self, timeline: TaskTimeline, groups, now: float

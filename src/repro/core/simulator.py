@@ -1352,6 +1352,7 @@ class SimCore:
             timeline = TaskTimeline([entry])
         ctrl, ready = backend.on_switch(entry.task_id, timeline, t)
         tel = self.telemetry
+        aud = tel.audit if tel is not None else None
         if tel is not None:
             self._tel_switch_begin(entry.task_id, t, ctrl)
         t += ctrl
@@ -1402,6 +1403,8 @@ class SimCore:
                         and rt.runnable(t)
                     ):
                         cmd = rt.queue[0]
+                        if aud is not None:
+                            aud.observe_command(self.name, cmd, space)
                         if touches:
                             pool.touch_runs(cmd.true_page_runs(space))
                         end = t + cmd.latency_us  # start == t, stall == 0
@@ -1432,6 +1435,8 @@ class SimCore:
             stall = backend.on_command(cmd, runs, start)
             if stall > 0.0:
                 try_macro = cached_decode  # residency changed: re-arm
+            if aud is not None:
+                aud.observe_command(self.name, cmd, space)
             if tel is not None and (start > t or stall > 0.0):
                 self._tel_command(tid, t, start, stall)
             end = start + stall + cmd.latency_us
@@ -1442,6 +1447,8 @@ class SimCore:
             if rt.advance(t) and self._complete(tid, rt, t):
                 break
         if tel is not None:
+            if aud is not None:
+                aud.end_quantum(self.name)
             tel.end("switch", self.name, t, task_id=tid)
             if self.switches % tel.sample_stride == 0:
                 tel.counter(self.name, "hbm_used_pages", t, self.pool.used)
@@ -1458,6 +1465,15 @@ class SimCore:
         tel.begin("switch", self.name, t, task_id=tid, ctrl_us=ctrl)
         if ctrl > 0.0:
             tel.stall(tid, "scheduler_control", ctrl)
+        if tel.audit is not None:
+            # predictive backends (msched/ideal) expose the coordinator's
+            # SwitchReport; backends that plan nothing are not audited
+            rep = getattr(self.backend, "last_report", None)
+            if rep is not None:
+                tel.audit.begin_quantum(
+                    self.name, tid, rep.predicted_runs,
+                    rep.migration.populated_runs, self.page_size,
+                )
         info = self.backend.switch_info()
         if info is not None:
             if info["populated_pages"] > 0:
@@ -1501,6 +1517,10 @@ class SimCore:
             )
             self._tel_faults = faults
             tel.stall(tid, "fault_service", stall)
+            if tel.audit is not None:
+                # under-fetch residue: pages the populate plan failed to
+                # cover, serviced by the fallback demand pager
+                tel.audit.observe_fault(self.name, tid, stall)
 
     def result(self) -> SimResult:
         per_task = {tid: rt.stats for tid, rt in self.tasks.items()}

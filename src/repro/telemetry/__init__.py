@@ -15,14 +15,29 @@ schema, the attribution taxonomy, and the Perfetto walkthrough.
     conservation asserted;
   * :mod:`~repro.telemetry.export` — Chrome trace_event JSON (Perfetto /
     ``chrome://tracing``) and JSONL exporters, plus the validator behind
-    ``scripts/trace_report.py --validate``.
+    ``scripts/trace_report.py --validate``;
+  * :mod:`~repro.telemetry.metrics` — the typed metrics registry (counters /
+    gauges / fixed-bucket histograms keyed by ``(name, track)``, closed
+    taxonomy) and the versioned ``metrics-report-v1`` artifact with
+    Prometheus + JSON exporters (``Telemetry(metrics=True)``);
+  * :mod:`~repro.telemetry.audit` — the online prediction auditor scoring
+    the paper's Table 1 accuracy claim live at every extended context
+    switch and fault-service boundary (``Telemetry(audit=True)``).
 """
+from repro.telemetry.audit import PredictionAuditor  # noqa: F401
 from repro.telemetry.export import (  # noqa: F401
     SCHEMA,
     chrome_trace,
     validate_trace,
     write_chrome,
     write_jsonl,
+)
+from repro.telemetry.metrics import (  # noqa: F401
+    METRIC_TYPES,
+    METRICS_SCHEMA,
+    Histogram,
+    MetricsRegistry,
+    MetricsReport,
 )
 from repro.telemetry.hub import (  # noqa: F401
     EVENT_TYPES,

@@ -231,7 +231,13 @@ class Telemetry:
     the event list — see the module docstring.
     """
 
-    def __init__(self, sample_stride: int = 8, max_events: int = 500_000):
+    def __init__(
+        self,
+        sample_stride: int = 8,
+        max_events: int = 500_000,
+        metrics=False,
+        audit=False,
+    ):
         if sample_stride < 1:
             raise ValueError("sample_stride must be >= 1")
         self.sample_stride = int(sample_stride)
@@ -242,6 +248,23 @@ class Telemetry:
         self.dropped_events = 0
         self.summary: Dict[str, object] = {}
         self._breakdown: Optional[Dict[int, Dict[str, float]]] = None
+        # per-(track, name) count of B events dropped at the cap whose E is
+        # still pending — those Es are dropped too, keeping pairs balanced
+        self._dropped_open: Dict[Tuple[str, str], int] = {}
+        # optional aggregation planes (off by default — the hub alone is the
+        # PR-7 surface): a typed MetricsRegistry fed from the same emission
+        # stream, and the online prediction auditor. Both are observers; a
+        # run with them attached is bit-for-bit identical to one without.
+        if metrics is True:
+            from repro.telemetry.metrics import MetricsRegistry
+
+            metrics = MetricsRegistry()
+        self.metrics = metrics or None
+        if audit is True:
+            from repro.telemetry.audit import PredictionAuditor
+
+            audit = PredictionAuditor(metrics=self.metrics)
+        self.audit = audit or None
 
     # -- emission -----------------------------------------------------------
     def emit(
@@ -258,10 +281,27 @@ class Telemetry:
             raise ValueError(f"unknown telemetry event {name!r}")
         if ph not in _PHASES:
             raise ValueError(f"unknown trace phase {ph!r}")
-        # "E" is exempt from the cap so B/E pairs stay balanced (bounded by
-        # the number of "B"s already admitted)
-        if ph != "E" and len(self.events) >= self.max_events:
+        # metrics see every emission *before* the cap: the cap bounds trace
+        # memory, not counter arithmetic — capped runs keep true totals
+        if self.metrics is not None:
+            self.metrics.on_event(name, ph, track, ts_us, dur_us, args)
+            if name == "rebalance_tick":
+                self._bank_rollup(ts_us)
+        # "E" is exempt from the cap so B/E pairs stay balanced — but an E
+        # whose own B was dropped must be dropped too, or the validator sees
+        # an unmatched E (per-(track, name) bookkeeping below)
+        if ph == "E":
+            key = (track, name)
+            pending = self._dropped_open.get(key, 0)
+            if pending:
+                self._dropped_open[key] = pending - 1
+                self.dropped_events += 1
+                return
+        elif len(self.events) >= self.max_events:
             self.dropped_events += 1
+            if ph == "B":
+                key = (track, name)
+                self._dropped_open[key] = self._dropped_open.get(key, 0) + 1
             return
         self.events.append(
             TelemetryEvent(ts_us, name, ph, track, dur_us, task_id, args)
@@ -286,6 +326,8 @@ class Telemetry:
         self.series.setdefault((track, name), []).append(
             (ts_us, float(value))
         )
+        if self.metrics is not None:
+            self.metrics.on_counter(track, name, value)
 
     def stall(self, task_id: int, key: str, us: float) -> None:
         self.ledger.add(task_id, key, us)
@@ -304,6 +346,10 @@ class Telemetry:
             control_us=result.control_us,
             dropped_events=self.dropped_events,
         )
+        if self.metrics is not None:
+            self._bank_rollup(result.sim_us)
+        if self.audit is not None:
+            self.summary["prediction_audit"] = self.audit.health()
         return self._breakdown
 
     def finalize_cluster(self, report) -> Dict[int, Dict[str, float]]:
@@ -339,6 +385,37 @@ class Telemetry:
             totals["compute_us"] += row["compute_us"]
             totals["non_compute_us"] += row["non_compute_us"]
         return totals
+
+    # -- metrics plane ------------------------------------------------------
+    def _bank_rollup(self, ts_us: float) -> None:
+        """One metrics snapshot: audit gauges refreshed first, so the rollup
+        row carries current prediction health. Called at every rebalance
+        tick and once at finalize — the finalize stamp (merged sim_us) can
+        precede the last drain-window tick, so clamp to keep the rollup
+        time series monotone."""
+        if self.audit is not None:
+            self.audit.export_gauges(self.metrics)
+        if self.metrics.rollups:
+            ts_us = max(ts_us, self.metrics.rollups[-1]["ts_us"])
+        self.metrics.rollup(ts_us)
+
+    def metrics_report(self, generated_us: Optional[float] = None):
+        """Assemble the versioned :class:`~repro.telemetry.metrics.
+        MetricsReport` (registry state + rollups + audit summary). Requires
+        ``Telemetry(metrics=True)``."""
+        if self.metrics is None:
+            raise RuntimeError(
+                "no metrics registry attached; construct the hub with "
+                "Telemetry(metrics=True)"
+            )
+        if self.audit is not None:
+            self.audit.export_gauges(self.metrics)
+        if generated_us is None:
+            generated_us = float(self.summary.get("sim_us", 0.0))
+        return self.metrics.report(
+            generated_us=generated_us,
+            audit=self.audit.summary() if self.audit is not None else None,
+        )
 
     # -- export (delegates to repro.telemetry.export) -----------------------
     def chrome_trace(self) -> dict:

@@ -1,0 +1,487 @@
+"""Metrics registry + online prediction audit: the closed metric taxonomy,
+the histogram percentile convention pin, the observer-contract bit-for-bit
+guarantee with the metrics/audit planes attached (static, serving, cluster,
+faulted — all four backends), the online-vs-offline Table 1 reconciliation,
+the under-fetch/ledger cross-check, the ``metrics-report-v1`` round-trip and
+Prometheus exposition, and the CLI surfaces (``msctl metrics``,
+``bench_diff``, ``trace_report --json``)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import FaultEvent, FaultInjector, homogeneous, simulate_cluster
+from repro.core.hardware import NVLINK_A100_GBPS, RTX5080
+from repro.core.predictor import TemplatePredictor, evaluate_accuracy
+from repro.core.profiler import profile_programs
+from repro.core.scheduler import RoundRobinPolicy
+from repro.core.simulator import percentile, simulate
+from repro.core.templates import analyze_traces
+from repro.core.workloads import LLMDecodeTask, MatMulTask, combo
+from repro.serving import (
+    AlwaysAdmit,
+    MSchedAdmission,
+    SLOSpec,
+    poisson_trace,
+    serve_trace,
+)
+from repro.telemetry import (
+    METRIC_TYPES,
+    METRICS_SCHEMA,
+    STALL_CATEGORIES,
+    Histogram,
+    MetricsRegistry,
+    MetricsReport,
+    PredictionAuditor,
+    Telemetry,
+    validate_trace,
+)
+
+ARCH = "qwen3-1.7b"
+PAGE = 1 << 20
+NV = NVLINK_A100_GBPS
+SLO = SLOSpec(ttft_us=3_000_000.0, tpot_us=100_000.0)
+
+_SCRIPTS = Path(__file__).resolve().parents[2] / "scripts"
+
+
+def _progs():
+    return [
+        LLMDecodeTask(0, page_size=PAGE, max_context=512),
+        MatMulTask(1, 2048, page_size=PAGE),
+    ]
+
+
+def _trace(rate=5.0, duration=1.2, seed=7, output_mean=16):
+    return poisson_trace(
+        rate, duration, seed=seed, tenants=(ARCH,), prompt_mean=64,
+        output_mean=output_mean, max_output=2 * output_mean,
+    )
+
+
+def _static(backend, telemetry=None, cap_ratio=1.5):
+    progs = _progs()
+    foot = sum(p.footprint_bytes() for p in progs)
+    q = 2_000.0 if backend in ("um", "suv") else 350_000.0
+    return simulate(
+        progs, RTX5080, backend, capacity_bytes=int(foot / cap_ratio),
+        sim_us=1_000_000.0, policy=RoundRobinPolicy(q), telemetry=telemetry,
+    )
+
+
+def _serve(backend, telemetry=None):
+    admission = (
+        MSchedAdmission(headroom=0.9) if backend == "msched" else AlwaysAdmit()
+    )
+    q = 2_000.0 if backend in ("um", "suv") else 350_000.0
+    return serve_trace(
+        _trace(), RTX5080, backend=backend, capacity_bytes=3 << 30,
+        admission=admission, policy=RoundRobinPolicy(q), page_size=PAGE,
+        slo=SLO, telemetry=telemetry,
+    )
+
+
+def _rec_tuple(r):
+    return (
+        r.task_id, r.arrival_us, r.admitted_us, r.first_iter_us,
+        r.finished_us, r.iterations_done, r.total_iterations, r.rejected,
+    )
+
+
+def _result_fingerprint(res):
+    return (
+        res.sim_us, res.faults, res.migrated_bytes, res.switches,
+        res.control_us, res.hbm_used_pages, res.hbm_freed_pages,
+        tuple(sorted(
+            (tid, st.completions, st.commands, st.busy_us)
+            for tid, st in res.per_task.items()
+        )),
+        tuple(_rec_tuple(r) for r in res.requests),
+    )
+
+
+def _cluster_fingerprint(rep):
+    m = rep.merged
+    return (
+        m.sim_us, m.faults, m.migrated_bytes, m.switches, m.control_us,
+        m.hbm_used_pages,
+        tuple(_rec_tuple(r) for r in m.requests),
+        len(rep.migrations), len(rep.peer_fetches), rep.peer_fetch_bytes,
+        rep.faults_applied, len(rep.recoveries), rep.checkpoints,
+        rep.shed_requests, rep.lost_requests,
+    )
+
+
+def _full_hub():
+    return Telemetry(sample_stride=1, metrics=True, audit=True)
+
+
+def _cluster(telemetry=None, faults=None):
+    return simulate_cluster(
+        _trace(rate=6.0, duration=1.5, seed=3, output_mean=24),
+        homogeneous(2, RTX5080, capacity_bytes=3 << 30, nvlink_gbps=NV),
+        backend="msched", placement="leastloaded",
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, slo=SLO, faults=faults, telemetry=telemetry,
+        rebalance_period_us=400_000.0, rebalance_threshold=0.4,
+        drain_factor=20.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Registry typing: the closed taxonomy
+# --------------------------------------------------------------------------
+
+
+def test_registry_rejects_unknown_and_mismatched_names():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.inc("mystery_total", "gpu0")
+    with pytest.raises(ValueError):
+        reg.gauge("switches_total", "gpu0", 1.0)  # counter name as gauge
+    with pytest.raises(ValueError):
+        reg.observe("hbm_used_pages", "gpu0", 1.0)  # gauge as histogram
+    with pytest.raises(ValueError):
+        reg.inc("switch_ctrl_us", "gpu0")  # histogram as counter
+
+
+def test_registry_counter_is_monotone():
+    reg = MetricsRegistry()
+    reg.inc("switches_total", "gpu0", 2)
+    reg.inc("switches_total", "gpu0")
+    assert reg.counter_value("switches_total", "gpu0") == 3
+    with pytest.raises(ValueError):
+        reg.inc("switches_total", "gpu0", -1)
+
+
+def test_metric_taxonomy_is_closed_and_total():
+    """Every name in METRIC_TYPES is writable through the API of its kind —
+    the taxonomy is the complete public surface."""
+    reg = MetricsRegistry()
+    for name, kind in METRIC_TYPES.items():
+        if kind == "counter":
+            reg.inc(name, "gpu0", 1)
+        elif kind == "gauge":
+            reg.gauge(name, "gpu0", 1.0)
+        else:
+            reg.observe(name, "gpu0", 1.0)
+    rep = reg.report()
+    assert len(rep.metrics) == len(METRIC_TYPES)
+
+
+def test_histogram_percentile_matches_repo_convention():
+    """Histogram.pct delegates to core.simulator.percentile: identical
+    samples give identical p50/p99 (the repo-wide nearest-rank pin)."""
+    samples = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+    h = Histogram()
+    for s in samples:
+        h.observe(s)
+    ref = sorted(samples)
+    for p in (0.0, 50.0, 90.0, 99.0, 100.0):
+        assert h.pct(p) == percentile(ref, p)
+    assert h.p50() == percentile(ref, 50.0)
+    assert h.p99() == percentile(ref, 99.0)
+    assert h.count == len(samples)
+    assert h.sum == pytest.approx(sum(samples))
+
+
+def test_metrics_report_requires_registry():
+    tel = Telemetry()
+    with pytest.raises(RuntimeError):
+        tel.metrics_report()
+
+
+# --------------------------------------------------------------------------
+# Observer contract with the metrics + audit planes attached
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_static_run_unperturbed_by_metrics_audit(backend):
+    off = _static(backend, telemetry=None)
+    on = _static(backend, telemetry=_full_hub())
+    assert _result_fingerprint(off) == _result_fingerprint(on)
+
+
+@pytest.mark.parametrize("backend", ["um", "msched", "ideal", "suv"])
+def test_serving_run_unperturbed_by_metrics_audit(backend):
+    off = _serve(backend, telemetry=None)
+    on = _serve(backend, telemetry=_full_hub())
+    assert _result_fingerprint(off.result) == _result_fingerprint(on.result)
+    assert off.to_row() == on.to_row()
+
+
+def test_cluster_run_unperturbed_by_metrics_audit():
+    off = _cluster(telemetry=None)
+    on = _cluster(telemetry=_full_hub())
+    assert _cluster_fingerprint(off) == _cluster_fingerprint(on)
+
+
+def test_faulted_cluster_run_unperturbed_by_metrics_audit():
+    def inj():
+        return FaultInjector([
+            FaultEvent(500_000.0, "gpu_fail", gpu="gpu0"),
+            FaultEvent(1_200_000.0, "gpu_recover", gpu="gpu0"),
+        ])
+
+    off = _cluster(telemetry=None, faults=inj())
+    on = _cluster(telemetry=_full_hub(), faults=inj())
+    assert _cluster_fingerprint(off) == _cluster_fingerprint(on)
+
+
+def test_event_counters_match_run_summary():
+    tel = _full_hub()
+    res = _static("msched", telemetry=tel)
+    reg = tel.metrics
+    assert reg.counter_value("switches_total", "gpu0") == res.switches
+    assert reg.counter_value("faults_total", "gpu0") == res.faults
+    assert reg.histogram("switch_ctrl_us", "gpu0").count == res.switches
+
+
+# --------------------------------------------------------------------------
+# Online audit == offline Table 1 (the paper's accuracy claim, scored live)
+# --------------------------------------------------------------------------
+
+
+def test_online_audit_reconciles_with_offline_table1():
+    """Feeding the auditor the exact command stream evaluate_accuracy
+    scores gives the same F-/F+ to float precision (pinned at 0.1 pp),
+    and template F+ stays 0.00% — the paper's Table 1 claim."""
+    for name in ("A", "D"):
+        progs = combo(name, page_size=PAGE)
+        store = profile_programs(progs, iters=4)
+        desc = analyze_traces(store)
+        for p in progs:
+            cmds = [c for it in (10, 11) for c in p.iteration(it)]
+            pred = TemplatePredictor(desc)
+            stats = evaluate_accuracy(pred, cmds, p.space)
+            aud = PredictionAuditor()
+            for c in cmds:
+                pred.annotate(c, p.space)
+                aud.observe_command("gpu0", c, p.space)
+            assert aud.fleet.true == stats.true_pages
+            assert aud.fleet.pred == stats.pred_pages
+            assert aud.fleet.missed == stats.missed_pages
+            assert aud.fleet.wrong == stats.wrong_pages
+            assert aud.fleet_fneg_pct() == pytest.approx(
+                stats.false_negative_pct, abs=0.1
+            )
+            assert aud.fleet_fpos_pct() == pytest.approx(
+                stats.false_positive_pct, abs=0.1
+            )
+            assert aud.fleet_fpos_pct() == 0.0  # template never overpredicts
+
+
+def test_traced_sim_audit_scores_template_live():
+    """End-to-end: a traced msched run over a paper combo keeps template
+    F+ at 0.00% in the live audit, and the audit block lands in the
+    finalized summary."""
+    progs = combo("A", page_size=PAGE)
+    foot = sum(p.footprint_bytes() for p in progs)
+    tel = _full_hub()
+    simulate(
+        progs, RTX5080, "msched", capacity_bytes=int(foot / 1.3),
+        sim_us=1_000_000.0, policy=RoundRobinPolicy(350_000.0),
+        telemetry=tel,
+    )
+    aud = tel.audit
+    assert aud.fleet.commands > 0
+    assert aud.quanta > 0
+    assert aud.fleet_fpos_pct() == 0.0
+    health = tel.summary["prediction_audit"]
+    assert health["audited_commands"] == aud.fleet.commands
+    assert health["false_positive_pct"] == 0.0
+
+
+def test_nonpredictive_backends_produce_no_audit():
+    for backend in ("um", "suv"):
+        tel = _full_hub()
+        _static(backend, telemetry=tel)
+        assert tel.audit.fleet.commands == 0
+        assert tel.audit.quanta == 0
+
+
+def test_underfetch_stalls_reconcile_with_ledger():
+    """The audit's under-fetch residue equals the stall ledger's
+    fault-service bucket over the same tasks."""
+    tel = _full_hub()
+    _static("msched", telemetry=tel)
+    rec = tel.audit.reconcile_ledger(tel)
+    assert rec["audit_underfetch_stall_us"] == pytest.approx(
+        rec["ledger_fault_service_us"], abs=1e-6
+    )
+    assert rec["diff_us"] == pytest.approx(0.0, abs=1e-6)
+
+
+# --------------------------------------------------------------------------
+# MetricsReport artifact: round-trip, schema guard, Prometheus, rollups
+# --------------------------------------------------------------------------
+
+
+def test_metrics_report_roundtrip_and_schema_guard(tmp_path):
+    tel = _full_hub()
+    _serve("msched", telemetry=tel)
+    rep = tel.metrics_report()
+    doc = rep.to_json()
+    assert doc["schema"] == METRICS_SCHEMA
+    back = MetricsReport.from_json(json.loads(json.dumps(doc)))
+    assert back.to_json() == doc
+    path = tmp_path / "m.json"
+    rep.write(path)
+    assert MetricsReport.from_json(
+        json.loads(path.read_text())
+    ).to_json() == doc
+    with pytest.raises(ValueError):
+        MetricsReport.from_json({"schema": "metrics-report-v999"})
+
+
+def test_prometheus_exposition_format():
+    tel = _full_hub()
+    _serve("msched", telemetry=tel)
+    text = tel.metrics_report().to_prometheus()
+    assert "# TYPE msched_switches_total counter" in text
+    assert 'msched_switches_total{track="gpu0"}' in text
+    assert "# TYPE msched_switch_ctrl_us histogram" in text
+    assert 'le="+Inf"' in text
+    assert "msched_switch_ctrl_us_count" in text
+    # buckets are cumulative: the +Inf bucket equals _count
+    lines = text.splitlines()
+    inf = next(
+        ln for ln in lines
+        if ln.startswith("msched_switch_ctrl_us_bucket")
+        and 'le="+Inf"' in ln and 'track="gpu0"' in ln
+    )
+    count = next(
+        ln for ln in lines
+        if ln.startswith("msched_switch_ctrl_us_count")
+        and 'track="gpu0"' in ln
+    )
+    assert inf.rsplit(" ", 1)[1] == count.rsplit(" ", 1)[1]
+
+
+def test_cluster_rollups_bank_per_rebalance_tick():
+    tel = _full_hub()
+    _cluster(telemetry=tel)
+    rep = tel.metrics_report()
+    # at least one mid-run tick plus the finalize snapshot
+    assert len(rep.rollups) >= 2
+    ts = [r["ts_us"] for r in rep.rollups]
+    assert ts == sorted(ts)
+    assert rep.audit is not None
+    assert rep.audit["fleet"]["commands"] == tel.audit.fleet.commands
+    # audit gauges are re-exported on the fleet track
+    assert ("audit_fneg_page_pct", "fleet") in tel.metrics.gauges
+
+
+def test_control_plane_reexports_prediction_health():
+    from repro.control import ControlPlane
+
+    control = ControlPlane(recovery="journal")
+    tel = _full_hub()
+    simulate_cluster(
+        _trace(), homogeneous(2, RTX5080, capacity_bytes=3 << 30,
+                              nvlink_gbps=NV),
+        backend="msched", placement="leastloaded",
+        admission_factory=lambda i: MSchedAdmission(headroom=0.9),
+        policy_factory=lambda i: RoundRobinPolicy(350_000.0),
+        page_size=PAGE, control=control, telemetry=tel, drain_factor=20.0,
+    )
+    health = control.prediction_health()
+    assert health is not None
+    assert health["audited_commands"] == tel.audit.fleet.commands
+    assert health["false_positive_pct"] == 0.0
+    # untraced control plane has no health to report
+    assert ControlPlane(recovery="journal").prediction_health() is None
+
+
+# --------------------------------------------------------------------------
+# CLI surfaces: msctl metrics, bench_diff, trace_report --json
+# --------------------------------------------------------------------------
+
+
+def _run_cli(script, *args):
+    return subprocess.run(
+        [sys.executable, str(_SCRIPTS / script), *map(str, args)],
+        capture_output=True, text=True,
+    )
+
+
+def test_msctl_metrics_pretty_prints_and_exposes_prom(tmp_path):
+    tel = _full_hub()
+    _serve("msched", telemetry=tel)
+    path = tmp_path / "m.json"
+    tel.metrics_report().write(path)
+    out = _run_cli("msctl.py", "metrics", path)
+    assert out.returncode == 0, out.stderr
+    assert "schema: metrics-report-v1" in out.stdout
+    assert "switches_total" in out.stdout
+    assert "prediction audit" in out.stdout
+    prom = _run_cli("msctl.py", "metrics", path, "--prom")
+    assert prom.returncode == 0, prom.stderr
+    assert "# TYPE msched_switches_total counter" in prom.stdout
+
+
+def test_bench_diff_passes_self_and_fails_injected_regression(tmp_path):
+    baseline = {
+        "benchmark": "x", "seed": 1, "oversubscription": 1.5,
+        "goodput_per_s": 100.0, "wall_s": 3.0, "meets_target": True,
+    }
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(baseline))
+    same = tmp_path / "same.json"
+    # wall-clock drift alone never fails the gate
+    same.write_text(json.dumps(dict(baseline, wall_s=99.0)))
+    assert _run_cli("bench_diff.py", base, same).returncode == 0
+
+    flipped = tmp_path / "flipped.json"
+    flipped.write_text(json.dumps(dict(baseline, meets_target=False)))
+    out = _run_cli("bench_diff.py", base, flipped)
+    assert out.returncode == 1
+    assert "GATE meets_target" in out.stdout
+
+    # numeric drift beyond tolerance on a config-matched row fails too
+    drifted = tmp_path / "drifted.json"
+    drifted.write_text(json.dumps(dict(baseline, goodput_per_s=80.0)))
+    out = _run_cli("bench_diff.py", base, drifted)
+    assert out.returncode == 1
+    assert "goodput_per_s" in out.stdout
+
+    # a config mismatch suppresses the numeric check (gates still compared)
+    other_cfg = tmp_path / "other.json"
+    other_cfg.write_text(
+        json.dumps(dict(baseline, seed=2, goodput_per_s=1.0))
+    )
+    assert _run_cli("bench_diff.py", base, other_cfg).returncode == 0
+
+
+def test_bench_diff_accepts_committed_artifacts_as_their_own_baseline():
+    repo = _SCRIPTS.parent
+    pairs = []
+    for name in ("BENCH_serving.json", "BENCH_sim_throughput.json"):
+        pairs += [repo / name, repo / name]
+    out = _run_cli("bench_diff.py", *pairs)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_trace_report_json_roundtrip(tmp_path):
+    tel = _full_hub()
+    _serve("msched", telemetry=tel)
+    path = tmp_path / "t.trace"
+    tel.write_chrome(path)
+    out = _run_cli("trace_report.py", path, "--json")
+    assert out.returncode == 0, out.stderr
+    doc = json.loads(out.stdout)
+    assert doc["schema"] == "msched-trace-v1"
+    assert not doc["empty"]
+    assert {r["category"] for r in doc["stalls"]["top_sources"]} <= set(
+        STALL_CATEGORIES
+    )
+    assert doc["stalls"]["tasks"] == len(tel.stall_breakdown())
+    assert doc["coalescing"]["planned_migrations"] > 0
+    assert doc["coalescing"]["pages_per_migration"] > 0
+    assert doc["summary"]["switches"] == tel.summary["switches"]
+    # the audit block rides in the summary
+    assert doc["summary"]["prediction_audit"]["false_positive_pct"] == 0.0

@@ -128,6 +128,35 @@ def test_event_cap_counts_drops_and_exempts_end_events():
     assert doc["dropped_events"] == 1
 
 
+def test_event_cap_drops_end_whose_begin_was_dropped():
+    """Regression: the E-exemption must not emit an end event whose begin
+    was dropped at the cap — the validator would see an unmatched E."""
+    tel = Telemetry(max_events=1)
+    tel.begin("switch", "gpu0", 0.0, task_id=1)   # admitted
+    tel.begin("switch", "gpu0", 1.0, task_id=2)   # over cap: dropped
+    tel.end("switch", "gpu0", 2.0, task_id=2)     # its B was dropped: dropped
+    tel.end("switch", "gpu0", 3.0, task_id=1)     # E of an admitted B: kept
+    assert [e.ph for e in tel.events] == ["B", "E"]
+    assert tel.dropped_events == 2
+    doc = chrome_trace(tel)
+    assert validate_trace(doc) == []
+    assert doc["dropped_events"] == 2
+
+
+def test_counter_only_trace_validates():
+    """A hub that only ever saw counter samples (no events) still exports
+    a valid trace with its probe series intact."""
+    tel = Telemetry(sample_stride=1)
+    for t in range(4):
+        tel.counter("gpu0", "hbm_used_pages", float(t), t * 10)
+    assert not tel.events
+    doc = chrome_trace(tel)
+    assert validate_trace(doc) == []
+    assert ("gpu0/hbm_used_pages" in doc["probes"])
+    assert [v for _t, v in doc["probes"]["gpu0/hbm_used_pages"]] == \
+        [0.0, 10.0, 20.0, 30.0]
+
+
 # --------------------------------------------------------------------------
 # Conservation law
 # --------------------------------------------------------------------------
@@ -170,6 +199,26 @@ def test_serving_trace_ledger_conserves(backend):
     assert set(STALL_CATEGORIES) <= set(totals)
     if backend == "um":
         assert totals["fault-service"] > 0.0, "UM must page-fault under 1.5x"
+
+
+def test_stall_totals_on_empty_hub():
+    """A finalized hub with no finished tasks (empty trace) reports an
+    all-zero totals dict rather than crashing or omitting categories."""
+    tel = Telemetry(sample_stride=1)
+    empty = poisson_trace(
+        0.0001, 0.0001, seed=1, tenants=(ARCH,), prompt_mean=64,
+        output_mean=8, max_output=16,
+    )
+    assert len(empty) == 0
+    serve_trace(
+        empty, RTX5080, backend="msched", capacity_bytes=3 << 30,
+        admission=MSchedAdmission(headroom=0.9),
+        policy=RoundRobinPolicy(350_000.0), page_size=PAGE, slo=SLO,
+        telemetry=tel,
+    )
+    totals = tel.stall_totals()
+    assert set(STALL_CATEGORIES) <= set(totals)
+    assert all(v == 0.0 for v in totals.values())
 
 
 def test_unfinalized_hub_raises():
