@@ -1,0 +1,383 @@
+"""Transfer-storm benchmark: scheduled link-graph planning vs greedy.
+
+Drives a deterministic migration storm over a 4-GPU A100 fleet wired as a
+*partial* NVLink ring (gpu0-1, 1-2, 2-3, 3-0 — opposite pairs have no direct
+edge), at 1.5x and 2x link oversubscription: per submission window, the
+storm's aggregate solo transfer time demands that multiple of the window's
+host-link capacity. The mix is the cluster engine's real traffic — RT
+restores, best-effort restores, peer fetches, vault snapshots, and
+speculative rebalance checkpoints across both adjacent (NVLink) and
+opposite (host-staged) pairs.
+
+Both systems price the *same* request storm:
+
+  * **greedy** — ``ClusterTopology.plan_transfer`` per request, in arrival
+    order: fluid-at-start shares, host staging for opposite pairs, no
+    urgency classes.
+  * **planned** — ``TransferPlanner.submit`` per window: urgency-ordered
+    admission, piecewise-constant shares with rebooking, NVLink detours
+    around saturated host legs, speculative deferral (deferred moves retry
+    at the next window, like the engine's rebalance protocol).
+
+Truth is one shared event-loop replay of the equal-share fluid model over
+each system's *actual* routes and start times. Headline metrics:
+
+  * **makespan_us** — when the storm's last byte lands (truth);
+  * **p99_landing_error_us** — p99 of |estimated landing - true landing|:
+    greedy estimates go stale the moment a sharer drains, the planner
+    rebooks so its committed plans track the truth.
+
+Acceptance (``planned_beats_greedy_makespan``): the planned makespan is
+strictly lower than greedy at every oversubscription level, and the planned
+p99 landing error is no worse (``planned_landing_error_not_worse``).
+Writes ``BENCH_transfer.json``.
+
+Usage: PYTHONPATH=src python -m benchmarks.transfer_storm [--smoke]
+       [--ratios 1.5 2.0] [--windows 8] [--seed 7] [--telemetry PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import random
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.topology import (
+    HOST,
+    ClusterTopology,
+    GPUNode,
+    TransferPlan,
+)
+from repro.cluster.transfer_plan import (
+    URGENCY_RESTORE,
+    URGENCY_RT,
+    TransferPlanner,
+    TransferRequest,
+)
+from repro.core.hardware import A100_40G, NVLINK_A100_GBPS
+from repro.telemetry.hub import TRACK_CLUSTER
+
+from benchmarks.common import print_json, write_json
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_transfer.json"
+WINDOW_US = 50_000.0
+GB = 1 << 30
+MB = 1 << 20
+
+# request mix: (kind, urgency, route shape, weight). Opposite pairs are the
+# storm's pressure point — greedy must host-stage them.
+_MIX = (
+    ("restore", URGENCY_RT, "restore", 1),
+    ("restore", URGENCY_RESTORE, "restore", 2),
+    ("snapshot", None, "snapshot", 2),
+    ("peer_fetch", None, "adjacent", 1),
+    ("checkpoint", None, "opposite", 6),
+)
+
+
+def ring_topology() -> ClusterTopology:
+    """4 x A100-40G, NVLink ring with no cross edges: gpu0<->gpu2 and
+    gpu1<->gpu3 must either host-stage or detour around the ring."""
+    names = [f"gpu{i}" for i in range(4)]
+    ring = [(names[i], names[(i + 1) % 4], NVLINK_A100_GBPS) for i in range(4)]
+    return ClusterTopology([GPUNode(n, A100_40G) for n in names], nvlinks=ring)
+
+
+def build_storm(
+    topo: ClusterTopology, ratio: float, windows: int, seed: int
+) -> List[Tuple[float, List[TransferRequest]]]:
+    """One storm: ``windows`` submission windows, each demanding ``ratio`` x
+    the window's aggregate host-link byte capacity (the oversubscription
+    knob). Deterministic per (ratio, windows, seed)."""
+    rnd = random.Random(seed)
+    names = [g.name for g in topo.gpus]
+    host_bw = topo.link(names[0], HOST).gbps * 1e3  # bytes/us per link
+    # ratio x what ALL host links can drain in one window: at 1.5x every
+    # window leaves host-leg backlog for the next, the storm regime
+    budget = ratio * WINDOW_US * host_bw * len(names)
+    weights = [w for *_, w in _MIX]
+    out = []
+    for w in range(windows):
+        t = w * WINDOW_US
+        reqs: List[TransferRequest] = []
+        remaining = budget
+        while remaining > 64 * MB:
+            kind, urgency, shape, _ = rnd.choices(_MIX, weights)[0]
+            nbytes = min(remaining, rnd.randint(256 * MB, 2 * GB))
+            i = rnd.randrange(4)
+            if shape == "restore":
+                src, dst = HOST, names[i]
+            elif shape == "snapshot":
+                src, dst = names[i], HOST
+            elif shape == "adjacent":
+                src, dst = names[i], names[(i + 1) % 4]
+            else:  # opposite pair: no direct NVLink edge
+                src, dst = names[i], names[(i + 2) % 4]
+            reqs.append(
+                TransferRequest(src, dst, int(nbytes), kind, urgency,
+                                task_id=len(out) * 100 + len(reqs))
+            )
+            remaining -= nbytes
+        out.append((t, reqs))
+    return out
+
+
+# --------------------------------------------------------------------------
+# shared truth: event-loop replay of the equal-share fluid model
+# --------------------------------------------------------------------------
+
+
+def _true_landings(
+    flights: List[Tuple[int, float, List, List[float], int]],
+) -> Dict[int, float]:
+    """Replay ``(fid, start_us, link_keys, caps, nbytes)`` flights through
+    the equal-share fluid model: shares re-split at every admission and leg
+    completion. Returns true landing time per fid."""
+    pending = sorted(flights, key=lambda f: (f[1], f[0]))
+    i = 0
+    active: List[dict] = []
+    out: Dict[int, float] = {}
+    t = 0.0
+    while i < len(pending) or active:
+        if not active:
+            t = max(t, pending[i][1])
+        while i < len(pending) and pending[i][1] <= t + 1e-9:
+            fid, start, keys, caps, nbytes = pending[i]
+            i += 1
+            active.append({"fid": fid, "keys": keys, "caps": caps, "leg": 0,
+                           "rem": float(nbytes), "nbytes": nbytes})
+        occ: Dict = {}
+        for a in active:
+            k = a["keys"][a["leg"]]
+            occ[k] = occ.get(k, 0) + 1
+        dt = math.inf
+        rates = []
+        for a in active:
+            r = a["caps"][a["leg"]] / occ[a["keys"][a["leg"]]]
+            rates.append(r)
+            if r > 0.0:
+                dt = min(dt, a["rem"] / r)
+        t_adm = pending[i][1] if i < len(pending) else math.inf
+        end = min(t + dt, t_adm)
+        for a, r in zip(active, rates):
+            a["rem"] -= r * (end - t)
+        t = end
+        done = []
+        for a, r in zip(active, rates):
+            eps = 1e-6 + 1e-9 * a["nbytes"]
+            stuck = r > 0.0 and a["rem"] / r <= 4.0 * math.ulp(max(t, 1.0))
+            if r > 0.0 and (a["rem"] <= eps or stuck):
+                a["leg"] += 1
+                if a["leg"] >= len(a["keys"]):
+                    out[a["fid"]] = t
+                    done.append(a)
+                else:
+                    a["rem"] = float(a["nbytes"])
+        for a in done:
+            active.remove(a)
+    return out
+
+
+def _plan_flights(
+    topo: ClusterTopology, plans: List[TransferPlan]
+) -> List[Tuple[int, float, List, List[float], int]]:
+    """Lift committed plans into replayable flights: per-leg link keys and
+    full (uncontended) capacities — the truth model re-derives the shares."""
+    flights = []
+    for fid, plan in enumerate(plans):
+        keys = [frozenset(name.split("<->")) for name, _ in plan.legs]
+        caps = [topo._links[k].gbps * 1e3 for k in keys]
+        flights.append((fid, plan.start_us, keys, caps, plan.nbytes))
+    return flights
+
+
+def _percentile(values: List[float], q: float) -> float:
+    if not values:
+        return 0.0
+    s = sorted(values)
+    idx = min(len(s) - 1, int(math.ceil(q * len(s))) - 1)
+    return s[max(0, idx)]
+
+
+# --------------------------------------------------------------------------
+# the two systems
+# --------------------------------------------------------------------------
+
+
+def run_greedy(storm, topo: ClusterTopology) -> Dict[str, object]:
+    """Arrival-order ``plan_transfer`` / ``plan_restore`` — the pre-planner
+    model. Budget-deferred requests retry at the next window."""
+    plans: List[TransferPlan] = []
+    backlog: List[TransferRequest] = []
+    t = 0.0
+    for t, reqs in storm:
+        todo, backlog = backlog + list(reqs), []
+        for req in todo:
+            if req.src == HOST:
+                p = topo.plan_restore(req.dst, req.nbytes, t,
+                                      urgency=req.urgency,
+                                      task_id=req.task_id)
+            else:
+                p = topo.plan_transfer(req.src, req.dst, req.nbytes, t,
+                                       kind=req.kind, urgency=req.urgency,
+                                       task_id=req.task_id)
+            if p is None:
+                backlog.append(req)
+            else:
+                plans.append(p)
+    retries = 0
+    while backlog:  # drain the tail exactly like later rebalance ticks
+        t += WINDOW_US
+        retries += 1
+        todo, backlog = backlog, []
+        for req in todo:
+            p = (topo.plan_restore(req.dst, req.nbytes, t,
+                                   urgency=req.urgency, task_id=req.task_id)
+                 if req.src == HOST else
+                 topo.plan_transfer(req.src, req.dst, req.nbytes, t,
+                                    kind=req.kind, urgency=req.urgency,
+                                    task_id=req.task_id))
+            if p is None:
+                backlog.append(req)
+            else:
+                plans.append(p)
+        if retries > 10_000:
+            raise RuntimeError("greedy backlog never drained")
+    truth = _true_landings(_plan_flights(topo, plans))
+    errors = [abs(p.arrival_us - truth[fid]) for fid, p in enumerate(plans)]
+    return {
+        "transfers": len(plans),
+        "deferred_retries": topo.deferred,
+        "makespan_us": max(truth.values()),
+        "estimate_makespan_us": max(p.arrival_us for p in plans),
+        "p99_landing_error_us": _percentile(errors, 0.99),
+        "mean_landing_error_us": sum(errors) / len(errors),
+    }
+
+
+def run_planned(
+    storm, topo: ClusterTopology, telemetry=None
+) -> Dict[str, object]:
+    """Window-batched ``TransferPlanner.submit``; deferred moves (budget or
+    urgency) retry at the next window."""
+    planner = TransferPlanner(topo, telemetry=telemetry)
+    topo.planner = planner
+    backlog: List[TransferRequest] = []
+    t = 0.0
+    for t, reqs in storm:
+        todo, backlog = backlog + list(reqs), []
+        results = planner.submit(todo, t)
+        backlog = [r for r, p in zip(todo, results) if p is None]
+        if telemetry is not None:
+            for key, depth in planner.link_queue_depths(t).items():
+                a, b = sorted(key)
+                telemetry.counter(f"link:{a}<->{b}", "queue_depth", t, depth)
+    retries = 0
+    while backlog:
+        t += WINDOW_US
+        retries += 1
+        todo, backlog = backlog, []
+        results = planner.submit(todo, t)
+        backlog = [r for r, p in zip(todo, results) if p is None]
+        if retries > 10_000:
+            raise RuntimeError("planned backlog never drained")
+    plans = [f.plan for f in planner.log]
+    truth = _true_landings(_plan_flights(topo, plans))
+    errors = [abs(p.arrival_us - truth[fid]) for fid, p in enumerate(plans)]
+    return {
+        "transfers": len(plans),
+        "windows": planner.windows,
+        "detours": planner.detours,
+        "replans": topo.replans,
+        "urgency_deferred": planner.urgency_deferred,
+        "makespan_us": max(truth.values()),
+        "estimate_makespan_us": max(p.arrival_us for p in plans),
+        "p99_landing_error_us": _percentile(errors, 0.99),
+        "mean_landing_error_us": sum(errors) / len(errors),
+    }
+
+
+def bench_level(
+    ratio: float, windows: int, seed: int, telemetry=None
+) -> Dict[str, object]:
+    storm = build_storm(ring_topology(), ratio, windows, seed)
+    n_reqs = sum(len(r) for _, r in storm)
+    greedy = run_greedy(storm, ring_topology())
+    planned = run_planned(storm, ring_topology(), telemetry=telemetry)
+    if telemetry is not None:
+        telemetry.span(
+            "transfer_plan", TRACK_CLUSTER, windows * WINDOW_US,
+            planned["makespan_us"], requests=n_reqs,
+            admitted=planned["transfers"], deferred=planned["urgency_deferred"],
+            replans=planned["replans"], detours=planned["detours"],
+            in_flight=0,
+        )
+    return {
+        "oversubscription": ratio,
+        "n_requests": n_reqs,
+        "seed": seed,
+        "greedy": greedy,
+        "planned": planned,
+        "makespan_gain": greedy["makespan_us"] / planned["makespan_us"],
+        "planned_beats_greedy_makespan":
+            planned["makespan_us"] < greedy["makespan_us"],
+        "planned_landing_error_not_worse":
+            planned["p99_landing_error_us"]
+            <= greedy["p99_landing_error_us"] + 1e-6,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 windows per level (CI)")
+    ap.add_argument("--ratios", nargs="+", type=float, default=[1.5, 2.0])
+    ap.add_argument("--windows", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--telemetry", type=Path, default=None,
+                    help="write a Chrome trace of the planned runs")
+    args = ap.parse_args(argv)
+    windows = 2 if args.smoke else args.windows
+
+    tel = None
+    if args.telemetry is not None:
+        from repro.telemetry import Telemetry
+
+        tel = Telemetry()
+
+    t0 = time.perf_counter()
+    levels = [
+        bench_level(r, windows, args.seed, telemetry=tel)
+        for r in args.ratios
+    ]
+    payload = {
+        "schema": "bench-transfer-v1",
+        "benchmark": "transfer_storm",
+        "topology": "4x A100-40G partial NVLink ring",
+        "window_us": WINDOW_US,
+        "windows": windows,
+        "seed": args.seed,
+        "smoke": args.smoke,
+        "wall_s": round(time.perf_counter() - t0, 3),
+        "levels": levels,
+        "planned_beats_greedy_makespan": all(
+            lv["planned_beats_greedy_makespan"] for lv in levels
+        ),
+        "planned_landing_error_not_worse": all(
+            lv["planned_landing_error_not_worse"] for lv in levels
+        ),
+    }
+    print_json(payload)
+    write_json(args.out, payload)
+    print(f"wrote {args.out}")
+    if tel is not None:
+        tel.write_chrome(args.telemetry)
+        print(f"telemetry: wrote Chrome trace to {args.telemetry}")
+    return 0 if payload["planned_beats_greedy_makespan"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,8 @@ GATE_KEYS = frozenset(
         "recovery_beats_cold_at_every_mtbf",
         "journal_beats_cold_rt_miss",
         "chaos_clean",
+        "planned_beats_greedy_makespan",
+        "planned_landing_error_not_worse",
     }
 )
 
@@ -75,6 +77,8 @@ CONFIG_KEYS = frozenset(
         "mtbf_us",
         "horizon_us",
         "checkpoint_period_us",
+        "windows",
+        "window_us",
         "rt_fraction",
         "hotspot_fraction",
         "nvlink_gbps",

@@ -23,6 +23,7 @@ point only that way.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.invariants import InvariantAuditor
@@ -43,7 +44,8 @@ from repro.cluster.faults import (
 from repro.cluster.migration import MigrationEvent, Rebalancer
 from repro.cluster.placement import MSchedPlacement, PlacementPolicy, make_placement
 from repro.cluster.prefetch import PeerFetchEvent, PeerPrefetchFabric
-from repro.cluster.topology import ClusterTopology
+from repro.cluster.topology import HOST, ClusterTopology
+from repro.cluster.transfer_plan import TransferPlanner
 from repro.telemetry.hub import TRACK_CLUSTER
 
 # version tag for ClusterReport.to_json artifacts (benchmarks/common.py).
@@ -159,6 +161,11 @@ class ClusterReport:
     deadline_misses: int = 0  # RT requests that missed TTFT/completion SLO
     preemptions: int = 0  # BE tasks preempted by deadline enforcement
     deadline_sheds: int = 0  # BE tasks shed after the escalation ladder
+    # transfer-planner accounting (zero in transfer_plan="greedy" mode; the
+    # fields stay in schema v2 — from_json defaults them for old artifacts)
+    planned_transfers: int = 0  # flights admitted by the TransferPlanner
+    planner_replans: int = 0  # committed plans rebooked by later admissions
+    planner_deferred: int = 0  # speculative moves deferred by urgency
 
     def to_row(self) -> Dict[str, object]:
         """Flatten for JSON artifacts (benchmarks)."""
@@ -198,6 +205,9 @@ class ClusterReport:
             "deadline_misses": self.deadline_misses,
             "preemptions": self.preemptions,
             "deadline_sheds": self.deadline_sheds,
+            "planned_transfers": self.planned_transfers,
+            "planner_replans": self.planner_replans,
+            "planner_deferred": self.planner_deferred,
             "per_gpu": [g.to_row() for g in self.per_gpu],
         }
         row.update(dataclasses.asdict(self.stats))
@@ -252,6 +262,9 @@ class ClusterReport:
             "deadline_misses": self.deadline_misses,
             "preemptions": self.preemptions,
             "deadline_sheds": self.deadline_sheds,
+            "planned_transfers": self.planned_transfers,
+            "planner_replans": self.planner_replans,
+            "planner_deferred": self.planner_deferred,
         }
 
     @classmethod
@@ -307,6 +320,9 @@ class ClusterReport:
             deadline_misses=doc.get("deadline_misses", 0),
             preemptions=doc.get("preemptions", 0),
             deadline_sheds=doc.get("deadline_sheds", 0),
+            planned_transfers=doc.get("planned_transfers", 0),
+            planner_replans=doc.get("planner_replans", 0),
+            planner_deferred=doc.get("planner_deferred", 0),
         )
 
 
@@ -337,6 +353,7 @@ def simulate_cluster(
     retry_backoff_us: float = 0.0,
     control=None,
     telemetry=None,
+    transfer_plan: str = "greedy",
 ) -> ClusterReport:
     """Replay ``trace`` across the cluster and report fleet-level serving
     quality.
@@ -388,6 +405,19 @@ def simulate_cluster(
     staging), and the stall ledger is resolved against the merged result
     before returning. ``None`` (the default) emits nothing and takes
     exactly the untraced code paths.
+
+    ``transfer_plan`` selects the bulk-transfer pricing model.
+    ``"greedy"`` (the default) prices every movement independently at
+    request time with the fluid-at-start share — the historical
+    behaviour, preserved bit-for-bit (the planner object is never
+    constructed). ``"auto"`` attaches a
+    :class:`~repro.cluster.transfer_plan.TransferPlanner` to multi-GPU
+    topologies: rebalance windows batch their checkpoint/p2p movements
+    into one routed, urgency-ordered schedule, landing estimates are
+    re-solved as sharers drain (pending arrivals are retimed in place),
+    saturated host links detour over idle NVLink paths, and speculative
+    moves whose projected landing exceeds ``defer_stretch`` x their solo
+    time are deferred to the next tick.
     """
     # lazy: serving depends on cluster.aggregate at module level; the
     # reverse edge must not exist at import time
@@ -441,6 +471,10 @@ def simulate_cluster(
     if peer_prefetch not in ("auto", "off"):
         raise ValueError(
             f"peer_prefetch must be 'auto' or 'off', got {peer_prefetch!r}"
+        )
+    if transfer_plan not in ("auto", "greedy"):
+        raise ValueError(
+            f"transfer_plan must be 'auto' or 'greedy', got {transfer_plan!r}"
         )
     fabric = None
     wired_placement = False
@@ -523,6 +557,54 @@ def simulate_cluster(
             fault_rt=fault_rt,
             telemetry=telemetry,
         )
+
+    # scheduled transfer planning: "greedy" (the default) never constructs
+    # the planner — every movement keeps the historical per-request fluid
+    # pricing bit-for-bit. "auto" attaches the window planner to multi-GPU
+    # fleets; 1-GPU topologies have no inter-GPU movement to schedule.
+    planner = None
+    if transfer_plan == "auto" and len(topology) > 1:
+        planner = TransferPlanner(topology, telemetry=telemetry)
+        topology.planner = planner
+        if fabric is not None:
+            fabric.planner = planner
+        core_by_name = {c.name: c for c in cores}
+
+        def _retime_arrival(plan, old_arrival):
+            # a sharer drained (or a cancel freed a leg): the planner moved
+            # this flight's landing, so the pending arrival injected at the
+            # stale estimate must move with it. Only bulk moves that inject
+            # a TaskArrival exactly at plan.arrival_us are retimed —
+            # snapshots land on HOST and redispatches offset the arrival,
+            # so both fail the match and are safely skipped.
+            if plan.kind not in ("checkpoint", "p2p", "restore"):
+                return
+            if plan.dst == HOST or plan.task_id is None:
+                return
+            core = core_by_name.get(plan.dst)
+            if core is None:
+                return
+            moved = False
+            for ev in core.pending:
+                if (
+                    ev.program.task_id == plan.task_id
+                    and abs(ev.time_us - old_arrival) < 1e-6
+                ):
+                    ev.time_us = plan.arrival_us
+                    moved = True
+            if moved:
+                core.pending = deque(
+                    sorted(core.pending, key=lambda e: e.time_us)
+                )
+            if fabric is not None and plan.kind == "p2p":
+                entry = fabric.directory.get(plan.task_id)
+                if (
+                    entry is not None
+                    and abs(entry.arrival_us - old_arrival) < 1e-6
+                ):
+                    entry.arrival_us = plan.arrival_us
+
+        topology.replan_hook = _retime_arrival
 
     # -- the cluster event loop --------------------------------------------
     try:
@@ -613,6 +695,10 @@ def simulate_cluster(
     finally:
         if wired_placement:
             placement.topology = prev_placement_topo
+        # a reused topology must not carry this run's planner (or retime
+        # hook, which closes over this run's cores) into the next run
+        topology.planner = None
+        topology.replan_hook = None
     if fabric is not None:
         # reclaim every remaining linger copy so end-of-run HBM accounting
         # balances (leak checks read pool.used)
@@ -694,6 +780,9 @@ def simulate_cluster(
         deadline_misses=control.deadline_misses if control else 0,
         preemptions=control.preemptions if control else 0,
         deadline_sheds=control.deadline_sheds if control else 0,
+        planned_transfers=len(planner.log) if planner else 0,
+        planner_replans=topology.replans,
+        planner_deferred=planner.urgency_deferred if planner else 0,
     )
     if telemetry is not None:
         telemetry.finalize_cluster(report)
@@ -716,6 +805,14 @@ def _sample_cluster_probes(
     telemetry.counter(
         "host", "staged_bytes", now, topology.host_staged_bytes(now)
     )
+    # planned runs also expose the scheduler's own per-link queue (flights
+    # with a remaining leg on the link); greedy runs have no planner and
+    # emit exactly the historical probe set
+    depths = (
+        topology.planner.link_queue_depths(now)
+        if topology.planner is not None
+        else None
+    )
     for link in topology.links():
         track = f"link:{link.a}<->{link.b}"
         telemetry.counter(
@@ -727,3 +824,10 @@ def _sample_cluster_probes(
             now,
             topology.inflight_bytes(link.a, link.b, now),
         )
+        if depths is not None:
+            telemetry.counter(
+                track,
+                "queue_depth",
+                now,
+                depths.get(frozenset((link.a, link.b)), 0),
+            )

@@ -62,6 +62,7 @@ from repro.core.simulator import (
 )
 from repro.cluster.migration import ResumedTask, checkpoint_roundtrip
 from repro.cluster.topology import HOST, ClusterTopology
+from repro.cluster.transfer_plan import URGENCY_RESTORE, URGENCY_RT
 from repro.control.deadline import slo_class_of
 
 FAULT_KINDS = (
@@ -278,8 +279,11 @@ class CheckpointVault:
                 runs = resident_runs_in(core.pool, span)
                 nbytes = run_page_count(runs) * self.page_size
                 if nbytes:
+                    # snapshots are speculative traffic: an attached planner
+                    # may defer them behind urgent restores under a storm
                     plan = self.topology.plan_transfer(
-                        core.name, HOST, nbytes, now
+                        core.name, HOST, nbytes, now,
+                        kind="snapshot", task_id=rt.prog.task_id,
                     )
                     if plan is None:
                         self.deferred += 1
@@ -700,7 +704,15 @@ class FaultRuntime:
         # progress-free checkpoint > cold
         if ck is not None and (ck.completed > 0 or linger_src is None):
             target = self._pick(prog, now)
-            plan = self.topology.plan_restore(target.name, ck.nbytes, now)
+            # RT-class restores outrank everything the planner schedules
+            urgency = (
+                URGENCY_RT
+                if slo_class_of(getattr(rec, "meta", None), prog) == "rt"
+                else URGENCY_RESTORE
+            )
+            plan = self.topology.plan_restore(
+                target.name, ck.nbytes, now, urgency=urgency, task_id=tid
+            )
             if plan is not None:
                 self._journal(
                     "recovery",
@@ -886,7 +898,15 @@ class FaultRuntime:
         arrival = max(now, ev.time_us)
         if warm:
             nbytes = run_page_count(warm) * target.page_size
-            plan = self.topology.plan_restore(target.name, nbytes, now)
+            urgency = (
+                URGENCY_RT
+                if slo_class_of(ev.meta, ev.program) == "rt"
+                else URGENCY_RESTORE
+            )
+            plan = self.topology.plan_restore(
+                target.name, nbytes, now,
+                urgency=urgency, task_id=ev.program.task_id,
+            )
             if plan is None:
                 warm = None
             else:

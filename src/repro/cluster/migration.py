@@ -276,8 +276,10 @@ class Rebalancer:
             plan = self._staged_plans.pop(tid, None)
             if plan is not None:
                 # the checkpointed working set parked in host DRAM will
-                # never be consumed — release the staging reservation
-                self.topology.cancel_staging(plan)
+                # never be consumed — release the staging reservation and
+                # mark the plan canceled so the in-flight probes stop
+                # counting it (a same-tick replan must count once)
+                self.topology.cancel_staging(plan, core.t)
             self.exhausted += 1
             rec.meta["retry_exhausted"] = True
             self.events.append(
@@ -404,6 +406,8 @@ class Rebalancer:
         )
 
     def tick(self, cores: Sequence[SimCore], now: float) -> List[MigrationEvent]:
+        if self.topology.planner is not None:
+            return self._tick_planned(cores, now)
         moves: List[MigrationEvent] = []
         alive = [c for c in cores if not c.failed]
         if len(alive) < 2:
@@ -422,38 +426,134 @@ class Rebalancer:
         self.events.extend(moves)
         return moves
 
-    def _move_one(
+    def _tick_planned(
+        self, cores: Sequence[SimCore], now: float
+    ) -> List[MigrationEvent]:
+        """Window collection for the attached
+        :class:`~repro.cluster.transfer_plan.TransferPlanner`: select up to
+        ``max_moves`` candidates first (steals commit immediately — they
+        move no bytes), then submit the bulk movements as *one* planner
+        window so they are urgency-ordered, routed, and priced against the
+        shared fluid schedule together. A deferred candidate (budget or
+        marginal-makespan) simply stays put and is reconsidered at a later
+        tick — identical caller semantics to a greedy budget deferral."""
+        from repro.cluster.transfer_plan import TransferRequest
+
+        moves: List[MigrationEvent] = []
+        alive = [c for c in cores if not c.failed]
+        if len(alive) < 2:
+            return moves
+        candidates: List[tuple] = []
+        picked: Dict[str, set] = {}
+        # selected-but-uncommitted candidates shift pressure so one window
+        # doesn't drain the same pressured pair max_moves times over
+        shift: Dict[str, float] = {}
+        for _ in range(self.max_moves):
+            loads = [
+                self.pressure(c) + shift.get(c.name, 0.0) for c in alive
+            ]
+            si = max(range(len(alive)), key=lambda i: loads[i])
+            di = min(range(len(alive)), key=lambda i: loads[i])
+            if si == di or loads[si] - loads[di] < self.threshold:
+                break
+            src, dst = alive[si], alive[di]
+            mv = self._try_steal(src, dst, now)
+            if mv is not None:
+                moves.append(mv)
+                self._emit_move(mv)
+                continue
+            tid = self._pick_victim(src, exclude=picked.get(src.name))
+            if tid is None:
+                break
+            span = src.tasks[tid].prog.space.page_span()
+            resident = resident_runs_in(src.pool, span)
+            pages = run_page_count(resident)
+            nbytes = pages * src.page_size
+            lazy = (
+                self.prefetch is not None
+                and self.topology.nvlink_peer(src.name, dst.name) is not None
+            )
+            manifest = MANIFEST_BASE_BYTES + MANIFEST_RUN_BYTES * len(resident)
+            candidates.append(
+                (src, dst, tid, resident, nbytes, lazy, manifest)
+            )
+            picked.setdefault(src.name, set()).add(tid)
+            shift[src.name] = shift.get(src.name, 0.0) - pages / max(
+                1, src.pool.capacity
+            )
+            shift[dst.name] = shift.get(dst.name, 0.0) + pages / max(
+                1, dst.pool.capacity
+            )
+        if candidates:
+            reqs = [
+                TransferRequest(
+                    src.name,
+                    dst.name,
+                    manifest if lazy else nbytes,
+                    "p2p" if lazy else "checkpoint",
+                    None,
+                    tid,
+                )
+                for (src, dst, tid, _r, nbytes, lazy, manifest) in candidates
+            ]
+            plans = self.topology.planner.submit(reqs, now)
+            for cand, plan in zip(candidates, plans):
+                if plan is None:
+                    continue  # deferred — reconsidered at a later tick
+                src, dst, tid, resident, nbytes, lazy, manifest = cand
+                if lazy:
+                    mv = self._commit_lazy(
+                        src, dst, tid, resident, manifest, plan, now
+                    )
+                else:
+                    mv = self._commit_checkpoint(
+                        src, dst, tid, resident, nbytes, plan, now
+                    )
+                moves.append(mv)
+                self._emit_move(mv)
+        self.events.extend(moves)
+        return moves
+
+    def _try_steal(
         self, src: SimCore, dst: SimCore, now: float
     ) -> Optional[MigrationEvent]:
         stolen = src.steal_waiting()
-        if stolen is not None:
-            ev, rec, warm = stolen
-            # a stolen candidate may itself be a migrated continuation whose
-            # checkpointed working set was still waiting for admission: the
-            # warm runs travel with it (staged in host DRAM either way), and
-            # a lingering peer copy either follows the retarget (NVLink
-            # reachable) or is harvested into the warm runs
-            warm = self._retarget_linger(ev.program.task_id, dst.name, warm)
-            self._journal(
-                "reroute",
-                now,
-                ev.program.task_id,
-                src=src.name,
-                dst=dst.name,
-                via="steal",
-            )
-            dst.inject(
-                TaskArrival(
-                    max(now, ev.time_us),
-                    ev.program,
-                    meta=dict(ev.meta, rerouted_from=src.name),
-                ),
-                warm_runs=warm,
-            )
-            return MigrationEvent(
-                now, ev.program.task_id, src.name, dst.name, "steal",
-                0, 0, max(now, ev.time_us),
-            )
+        if stolen is None:
+            return None
+        ev, rec, warm = stolen
+        # a stolen candidate may itself be a migrated continuation whose
+        # checkpointed working set was still waiting for admission: the
+        # warm runs travel with it (staged in host DRAM either way), and
+        # a lingering peer copy either follows the retarget (NVLink
+        # reachable) or is harvested into the warm runs
+        warm = self._retarget_linger(ev.program.task_id, dst.name, warm)
+        self._journal(
+            "reroute",
+            now,
+            ev.program.task_id,
+            src=src.name,
+            dst=dst.name,
+            via="steal",
+        )
+        dst.inject(
+            TaskArrival(
+                max(now, ev.time_us),
+                ev.program,
+                meta=dict(ev.meta, rerouted_from=src.name),
+            ),
+            warm_runs=warm,
+        )
+        return MigrationEvent(
+            now, ev.program.task_id, src.name, dst.name, "steal",
+            0, 0, max(now, ev.time_us),
+        )
+
+    def _move_one(
+        self, src: SimCore, dst: SimCore, now: float
+    ) -> Optional[MigrationEvent]:
+        mv = self._try_steal(src, dst, now)
+        if mv is not None:
+            return mv
         tid = self._pick_victim(src)
         if tid is None:
             return None
@@ -467,9 +567,25 @@ class Rebalancer:
             and self.topology.nvlink_peer(src.name, dst.name) is not None
         ):
             return self._move_lazy(src, dst, tid, resident, now)
-        plan = self.topology.plan_transfer(src.name, dst.name, nbytes, now)
+        plan = self.topology.plan_transfer(
+            src.name, dst.name, nbytes, now, kind="checkpoint", task_id=tid
+        )
         if plan is None:
             return None
+        return self._commit_checkpoint(
+            src, dst, tid, resident, nbytes, plan, now
+        )
+
+    def _commit_checkpoint(
+        self,
+        src: SimCore,
+        dst: SimCore,
+        tid: int,
+        resident,
+        nbytes: int,
+        plan,
+        now: float,
+    ) -> MigrationEvent:
         self._journal(
             "migrate",
             now,
@@ -515,9 +631,23 @@ class Rebalancer:
         free to scavenge) and the target's extended context switches
         prefetch them peer-to-peer as the planner demands them."""
         manifest = MANIFEST_BASE_BYTES + MANIFEST_RUN_BYTES * len(resident)
-        plan = self.topology.plan_transfer(src.name, dst.name, manifest, now)
+        plan = self.topology.plan_transfer(
+            src.name, dst.name, manifest, now, kind="p2p", task_id=tid
+        )
         if plan is None:
             return None
+        return self._commit_lazy(src, dst, tid, resident, manifest, plan, now)
+
+    def _commit_lazy(
+        self,
+        src: SimCore,
+        dst: SimCore,
+        tid: int,
+        resident,
+        manifest: int,
+        plan,
+        now: float,
+    ) -> MigrationEvent:
         # journaled with src/dst/arrival: a journal replay rebuilds the
         # wiped directory entry for the still-lingering copy from this
         # record (validated against live pool residency)
@@ -552,11 +682,17 @@ class Rebalancer:
             completed_iters=ej.completed,
         )
 
-    def _pick_victim(self, src: SimCore) -> Optional[int]:
+    def _pick_victim(
+        self, src: SimCore, exclude: Optional[set] = None
+    ) -> Optional[int]:
         """Most recently admitted running task (least sunk prefix — the
-        work-stealing heuristic); deterministic tie-break on task id."""
+        work-stealing heuristic); deterministic tie-break on task id.
+        ``exclude`` skips tasks already selected in the current planner
+        window (they are not ejected until their plan is admitted)."""
         best = None
         for tid in src.tasks:
+            if exclude and tid in exclude:
+                continue
             rec = src.rec_by_tid.get(tid)
             admitted = rec.admitted_us if rec is not None else 0.0
             key = (admitted if admitted is not None else 0.0, tid)

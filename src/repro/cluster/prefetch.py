@@ -91,6 +91,12 @@ class PeerPrefetchFabric:
         self.finish_reaped = 0
         # telemetry hub or None; assigned by simulate_cluster when tracing
         self.telemetry = None
+        # TransferPlanner or None; assigned by simulate_cluster in
+        # transfer_plan="auto" mode. When present, the cluster view applies
+        # the planner's pressure feedback: a lingering copy whose refetch
+        # saving no longer covers the local misses its retention causes is
+        # left unprotected for the eviction scavenger.
+        self.planner = None
 
     def wire(self) -> None:
         """Install ``peer_source`` + ``cluster_view`` on every MSched
@@ -165,7 +171,10 @@ class PeerPrefetchFabric:
         if not peer:
             return None
         nbytes = run_page_count(peer) * core.page_size
-        plan = self.topology.plan_transfer(entry.src, core.name, nbytes, now)
+        plan = self.topology.plan_transfer(
+            entry.src, core.name, nbytes, now,
+            kind="peer_fetch", task_id=task_id,
+        )
         if plan is None:  # direct edges never stage, but stay defensive
             return None
         rate = nbytes / max(plan.arrival_us - now, 1e-9)
@@ -212,6 +221,14 @@ class PeerPrefetchFabric:
         def view(now: float) -> List[Tuple[float, List[PageRun]]]:
             out: List[Tuple[float, List[PageRun]]] = []
             for entry in self.directory.on_gpu(core.name):
+                if self.planner is not None and not (
+                    self.planner.linger_retention_ok(entry, core, now)
+                ):
+                    # pressure feedback: the refetch saving no longer pays
+                    # for the holder's misses (or there is zero headroom) —
+                    # leave the copy unprotected; the scavenger may take it
+                    # and later fetches fall back to the host tier
+                    continue
                 est = self._next_use_estimate(entry, now)
                 if est is not None:
                     out.append((est, entry.runs))

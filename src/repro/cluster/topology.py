@@ -17,11 +17,30 @@ transfers) while still penalizing migration storms that pile onto one PCIe
 root port — the first-order effect the paper's pipelined-migration analysis
 (§6.3) cares about. The assumptions are documented in EXPERIMENTS.md
 ("Cluster topology model").
+
+When a :class:`~repro.cluster.transfer_plan.TransferPlanner` is attached
+(``simulate_cluster(transfer_plan="auto")``), :meth:`plan_transfer` /
+:meth:`plan_restore` delegate to it instead: the planner prices every move
+against a piecewise-constant fluid schedule (shares re-evaluated as sharers
+drain), may route around a saturated host link over an idle NVLink detour,
+and *rebooks* in-flight plans (:meth:`rebook`) when later admissions change
+their landing times — firing ``replan_hook`` so the engine can retime the
+dependent arrival events. With no planner attached every code path below is
+byte-identical to the pre-planner fluid-at-start model.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple
+from typing import (
+    Callable,
+    Dict,
+    FrozenSet,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 from repro.core.hardware import Platform
 from repro.core.pages import PageRun, merge_runs, run_page_count, subtract_runs
@@ -59,7 +78,14 @@ class Link:
 @dataclasses.dataclass
 class TransferPlan:
     """One planned inter-GPU transfer: leg completion times on the chosen
-    path, with the share each leg got of its link."""
+    path, with the share each leg got of its link.
+
+    ``kind``/``task_id`` classify the payload for telemetry and replan
+    routing (``"bulk"`` when the caller did not say). ``canceled_us`` is
+    stamped by :meth:`ClusterTopology.cancel_staging`: from that instant
+    the plan's remaining legs no longer count as in-flight — without it a
+    canceled transfer and its same-timestamp retry would both be counted
+    by the :meth:`ClusterTopology.inflight_bytes` probe."""
 
     src: str
     dst: str
@@ -68,6 +94,9 @@ class TransferPlan:
     arrival_us: float
     staged: bool  # True when routed through host DRAM
     legs: List[Tuple[str, float]]  # (link key as "a<->b", leg end time)
+    kind: str = "bulk"
+    task_id: Optional[int] = None
+    canceled_us: Optional[float] = None
 
 
 HOST = "host"
@@ -109,6 +138,13 @@ class ClusterTopology:
         # 0.0 takes an NVLink edge down entirely (traffic re-routes through
         # host staging)
         self._degraded: Dict[FrozenSet[str], float] = {}
+        # scheduled-transfer mode: when a TransferPlanner is attached the
+        # plan_* entry points delegate to it; replan_hook fires whenever a
+        # rebook moves a committed plan's arrival (the engine retimes the
+        # dependent TaskArrival). Both stay None in greedy mode.
+        self.planner = None  # repro.cluster.transfer_plan.TransferPlanner
+        self.replan_hook: Optional[Callable[[TransferPlan, float], None]] = None
+        self.replans = 0
 
     def _add(self, link: Link) -> None:
         self._links[link.key()] = link
@@ -153,11 +189,16 @@ class ClusterTopology:
         """Bytes of planned transfers whose ``a<->b`` leg is still in flight
         at ``at_us`` — a read-only probe (telemetry link-utilization
         counters). A leg covers ``[previous leg's end, its own end)``;
-        fluid-at-start pricing means the payload occupies the whole leg."""
+        fluid-at-start pricing means the payload occupies the whole leg.
+        A canceled plan (retry chain exhausted, unreachable working set)
+        stops counting at its ``canceled_us``: a transfer canceled and
+        replanned at the same timestamp must count once, not twice."""
         name = f"{a}<->{b}"
         alt = f"{b}<->{a}"
         total = 0
         for plan in self.transfers:
+            if plan.canceled_us is not None and at_us >= plan.canceled_us:
+                continue
             start = plan.start_us
             for leg_name, leg_end in plan.legs:
                 if leg_name in (name, alt) and start <= at_us < leg_end:
@@ -207,6 +248,9 @@ class ClusterTopology:
         self.transfers.clear()
         self.deferred = 0
         self._degraded.clear()
+        self.replans = 0
+        if self.planner is not None:
+            self.planner.reset()
 
     # -- fault injection -----------------------------------------------------
     def degrade(self, a: str, b: str, factor: float) -> None:
@@ -234,11 +278,21 @@ class ClusterTopology:
         """Undo :meth:`degrade` on the ``a<->b`` link."""
         self._degraded.pop(frozenset((a, b)), None)
 
-    def cancel_staging(self, plan: TransferPlan) -> int:
+    def cancel_staging(
+        self, plan: TransferPlan, at_us: Optional[float] = None
+    ) -> int:
         """Drop a staged transfer's host-DRAM reservation before it drains
         (a retry chain was exhausted, or a failure made the parked working
         set unreachable — the bytes will never be consumed). Returns bytes
-        released (0 when the staging already drained)."""
+        released (0 when the staging already drained).
+
+        ``at_us`` marks the plan canceled at that instant so the in-flight
+        probes stop counting its remaining legs — a transfer canceled and
+        replanned at the same timestamp otherwise shows up twice in
+        :meth:`inflight_bytes`. Fluid-at-start *pricing* deliberately keeps
+        the dead booking (conservative, and byte-identical to the
+        pre-planner model); an attached planner instead drops the flight
+        and rebooks the survivors at their recovered shares."""
         if not plan.staged:
             return 0
         token = (plan.start_us, plan.arrival_us, plan.nbytes)
@@ -246,6 +300,10 @@ class ClusterTopology:
             self._staged.remove(token)
         except ValueError:
             return 0
+        if at_us is not None:
+            plan.canceled_us = at_us
+            if self.planner is not None:
+                self.planner.on_cancel(plan, at_us)
         return plan.nbytes
 
     def _sharers(self, key: FrozenSet[str], at_us: float) -> int:
@@ -254,17 +312,82 @@ class ClusterTopology:
         ends[:] = [e for e in ends if e > at_us]
         return 1 + len(ends)
 
+    # -- planner bookkeeping --------------------------------------------------
+    def book(self, plan: TransferPlan) -> None:
+        """Commit an externally-priced plan (the attached planner's exact
+        piecewise-constant schedule) into the same bookkeeping greedy plans
+        use, so ``active_on`` / ``inflight_bytes`` / ``host_staged_bytes``
+        and the staging-cancel protocol keep working unchanged."""
+        for leg_name, leg_end in plan.legs:
+            key = frozenset(leg_name.split("<->"))
+            self._active.setdefault(key, []).append(leg_end)
+        if plan.staged:
+            self._staged.append((plan.start_us, plan.arrival_us, plan.nbytes))
+        self.transfers.append(plan)
+
+    def rebook(self, plan: TransferPlan, new_legs: List[Tuple[str, float]]) -> None:
+        """Replace a committed plan's leg schedule in place (the planner
+        re-solved the fluid schedule after a later admission or a cancel
+        changed this flight's shares). Updates the active-end and staging
+        ledgers to the new times, counts a replan, and fires
+        ``replan_hook(plan, old_arrival_us)`` so the engine can retime the
+        arrival event that depends on this landing."""
+        old_arrival = plan.arrival_us
+        for leg_name, leg_end in plan.legs:
+            lst = self._active.get(frozenset(leg_name.split("<->")))
+            if lst is not None:
+                try:
+                    lst.remove(leg_end)
+                except ValueError:
+                    pass  # already pruned by a _sharers sweep
+        for leg_name, leg_end in new_legs:
+            key = frozenset(leg_name.split("<->"))
+            self._active.setdefault(key, []).append(leg_end)
+        new_arrival = new_legs[-1][1] if new_legs else old_arrival
+        if plan.staged:
+            token = (plan.start_us, old_arrival, plan.nbytes)
+            try:
+                i = self._staged.index(token)
+                self._staged[i] = (plan.start_us, new_arrival, plan.nbytes)
+            except ValueError:
+                pass  # staging already drained or canceled
+        plan.legs = list(new_legs)
+        plan.arrival_us = new_arrival
+        if new_arrival != old_arrival:
+            self.replans += 1
+            if self.replan_hook is not None:
+                self.replan_hook(plan, old_arrival)
+
     # -- planning ------------------------------------------------------------
     def plan_transfer(
-        self, src: str, dst: str, nbytes: int, now: float
+        self,
+        src: str,
+        dst: str,
+        nbytes: int,
+        now: float,
+        *,
+        kind: str = "bulk",
+        urgency: Optional[int] = None,
+        task_id: Optional[int] = None,
     ) -> Optional[TransferPlan]:
         """Price moving ``nbytes`` from ``src`` to ``dst`` starting at
         ``now`` and commit the plan to the contention bookkeeping. Returns
         ``None`` (and counts a deferral) when the transfer would need host
         staging beyond the DRAM budget — the caller retries at a later
-        rebalance tick, when earlier stagings have drained."""
+        rebalance tick, when earlier stagings have drained.
+
+        ``kind``/``urgency``/``task_id`` classify the movement for the
+        attached :class:`~repro.cluster.transfer_plan.TransferPlanner`
+        (scheduled mode); the greedy model stamps them on the plan and
+        otherwise ignores them, so greedy pricing is unchanged."""
         if src == dst:
             raise ValueError("transfer to self")
+        if self.planner is not None:
+            from repro.cluster.transfer_plan import TransferRequest
+
+            return self.planner.submit_one(
+                TransferRequest(src, dst, nbytes, kind, urgency, task_id), now
+            )
         path = self.path(src, dst)
         staged = len(path) > 1
         if staged:
@@ -283,12 +406,20 @@ class ClusterTopology:
             legs.append((f"{link.a}<->{link.b}", t))
         if staged:
             self._staged.append((now, t, nbytes))
-        plan = TransferPlan(src, dst, nbytes, now, t, staged, legs)
+        plan = TransferPlan(
+            src, dst, nbytes, now, t, staged, legs, kind=kind, task_id=task_id
+        )
         self.transfers.append(plan)
         return plan
 
     def plan_restore(
-        self, dst: str, nbytes: int, now: float
+        self,
+        dst: str,
+        nbytes: int,
+        now: float,
+        *,
+        urgency: Optional[int] = None,
+        task_id: Optional[int] = None,
     ) -> Optional[TransferPlan]:
         """Price re-landing ``nbytes`` that already sit in host DRAM (a
         checkpoint restore, or a re-dispatched continuation's warm working
@@ -299,7 +430,17 @@ class ClusterTopology:
         (a checkpoint of a task with nothing resident) lands instantly and
         never touches the link or the staging ledger."""
         if nbytes <= 0:
-            return TransferPlan(HOST, dst, 0, now, now, False, [])
+            return TransferPlan(
+                HOST, dst, 0, now, now, False, [], kind="restore",
+                task_id=task_id,
+            )
+        if self.planner is not None:
+            from repro.cluster.transfer_plan import TransferRequest
+
+            return self.planner.submit_one(
+                TransferRequest(HOST, dst, nbytes, "restore", urgency, task_id),
+                now,
+            )
         in_use = self.host_staged_bytes(now)
         if in_use + nbytes > self.host_dram_bytes:
             self.deferred += 1
@@ -311,7 +452,8 @@ class ClusterTopology:
         t = now + nbytes / rate
         self._active[key].append(t)
         plan = TransferPlan(
-            HOST, dst, nbytes, now, t, True, [(f"{link.a}<->{link.b}", t)]
+            HOST, dst, nbytes, now, t, True, [(f"{link.a}<->{link.b}", t)],
+            kind="restore", task_id=task_id,
         )
         self._staged.append((now, t, nbytes))
         self.transfers.append(plan)

@@ -51,6 +51,7 @@ EVENT_TYPES = frozenset(
         "gpu_fail",  # i: device failure boundary
         "gpu_recover",  # i: device back up
         "rebalance_tick",  # i: one rebalancer tick on the cluster track
+        "transfer_plan",  # X: one planner window (admission -> makespan)
         "recovery",  # i: one recovery decision for a fault victim
         "finish",  # i: a task retires
         "coordinator_crash",  # i: control plane lost its volatile state
